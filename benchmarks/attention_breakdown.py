@@ -1,0 +1,63 @@
+"""Paper Fig. 2 + Table II: (a) share of iteration time spent in attention;
+(b) irregular topology-pattern attention backward cost vs dense — the
+motivation for Elastic Computation Reformation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import GraphTrainBench, row, timeit
+from repro.core.dual_attention import cluster_sparse_attention
+from repro.core.graph import sbm_graph
+from repro.core.reformation import build_layout
+from repro.models.layers import chunked_attention
+
+
+def main(full=False):
+    # (a) iteration-time share of attention: time full step vs FFN-only
+    bench = GraphTrainBench(arch="graphormer_slim", n=1024)
+    params, ost = bench.init()
+    t_full = timeit(bench._loss_dense_nobias, params, ost, bench.batch)
+    t_sparse = timeit(bench._loss_sparse, params, ost, bench.batch)
+    row("fig2_step_dense", t_full * 1e6,
+        f"sparse_step={t_sparse*1e6:.0f}us ratio={t_full/t_sparse:.2f}x")
+
+    # (b) Table II: backward time of unreformed topology pattern vs dense
+    # vs reformed (TorchGT) attention
+    S = 8192 if not full else 32768
+    from repro.core.reorder import cluster_reorder
+    g = sbm_graph(S - 1, 8, p_in=min(0.5, 400.0 / S), p_out=0.4 / S, seed=0)
+    perm, _ = cluster_reorder(g, 8)
+    g = g.permuted(perm)
+    lay_topo = build_layout(g, bq=128, bk=128, k_clusters=8, d_b=16,
+                            beta_thre=0.0, n_global=1)       # irregular
+    lay_ref = build_layout(g, bq=128, bk=128, k_clusters=8, d_b=128,
+                           beta_thre=5 * g.sparsity, n_global=1,
+                           buckets=False)                     # reformed
+    Sp = lay_topo.seq_len
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, Sp, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, Sp, 4, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, Sp, 4, 16))
+    bi_t, bu_t = jnp.asarray(lay_topo.block_idx)[None], \
+        jnp.asarray(lay_topo.buckets)[None]
+    bi_r = jnp.asarray(lay_ref.block_idx)[None]
+
+    def bwd(fn):
+        g_ = jax.jit(jax.grad(lambda a, b, c: fn(a, b, c).sum()))
+        return timeit(g_, q, k, v)
+
+    t_topo = bwd(lambda a, b, c: cluster_sparse_attention(
+        a, b, c, bi_t, bu_t, None, bq=128, bk=128))
+    t_reform = bwd(lambda a, b, c: cluster_sparse_attention(
+        a, b, c, bi_r, None, None, bq=128, bk=128))
+    t_dense = bwd(lambda a, b, c: chunked_attention(
+        a, b, c, causal=False, chunk_q=1024, chunk_k=1024))
+    row(f"tab2_bw_topo_S{Sp}", t_topo * 1e6,
+        f"dense={t_dense*1e6:.0f}us reform={t_reform*1e6:.0f}us "
+        f"reform_speedup={t_topo/t_reform:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

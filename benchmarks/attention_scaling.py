@@ -1,0 +1,81 @@
+"""Paper Fig. 12: attention module compute time vs sequence length and vs
+hidden dim — FlashAttention(dense) vs topology-sparse vs TorchGT
+(cluster-sparse reformed). CPU wall-clock + analytic FLOP ratio."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.dual_attention import cluster_sparse_attention
+from repro.core.graph import sbm_graph
+from repro.core.reformation import build_layout
+from repro.models.layers import chunked_attention
+
+
+def attention_variants(S=8192, H=4, Dh=16, seed=0, full=False):
+    from repro.core.reorder import cluster_reorder
+
+    g = sbm_graph(S - 1, 8, p_in=min(0.5, 400.0 / S), p_out=0.4 / S,
+                  seed=seed)
+    perm, _ = cluster_reorder(g, 8)   # the paper's cluster reordering
+    g = g.permuted(perm)
+    # topology pattern WITHOUT reformation (exact edges, beta_thre=0)
+    lay_topo = build_layout(g, bq=128, bk=128, k_clusters=8, d_b=16,
+                            beta_thre=0.0, n_global=1)
+    # TorchGT: elastic reformation at the suggested 5*beta_G
+    lay_gt = build_layout(g, bq=128, bk=128, k_clusters=8, d_b=128,
+                          beta_thre=5 * g.sparsity, n_global=1,
+                          buckets=False)
+    S_pad = lay_topo.seq_len
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, S_pad, H, Dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S_pad, H, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, S_pad, H, Dh))
+
+    def dense(qq, kk, vv):
+        return chunked_attention(qq, kk, vv, causal=False,
+                                 chunk_q=1024, chunk_k=1024)
+
+    bi_t = jnp.asarray(lay_topo.block_idx)[None]
+    bu_t = jnp.asarray(lay_topo.buckets)[None]
+    bi_g = jnp.asarray(lay_gt.block_idx)[None]
+
+    def topo(qq, kk, vv):
+        return cluster_sparse_attention(qq, kk, vv, bi_t, bu_t, None,
+                                        bq=128, bk=128, causal=False)
+
+    def torchgt(qq, kk, vv):
+        return cluster_sparse_attention(qq, kk, vv, bi_g, None, None,
+                                        bq=128, bk=128, causal=False)
+
+    t_dense = timeit(jax.jit(dense), q, k, v)
+    t_topo = timeit(jax.jit(topo), q, k, v)
+    t_gt = timeit(jax.jit(torchgt), q, k, v)
+    return {
+        "S": S_pad,
+        "dense_s": t_dense, "topo_s": t_topo, "torchgt_s": t_gt,
+        "speedup_vs_dense": t_dense / t_gt,
+        "density_topo": lay_topo.density(),
+        "density_torchgt": lay_gt.density(),
+    }
+
+
+def main(full=False):
+    for S in ([4096, 8192] if not full else
+              [4096, 8192, 16384, 32768, 65536]):
+        r = attention_variants(S=S)
+        row(f"fig12a_attn_S{r['S']}", r["torchgt_s"] * 1e6,
+            f"dense={r['dense_s']*1e6:.0f}us topo={r['topo_s']*1e6:.0f}us "
+            f"speedup={r['speedup_vs_dense']:.1f}x "
+            f"density={r['density_torchgt']:.4f}")
+    for Dh in ([16, 64] if not full else [16, 32, 64]):
+        r = attention_variants(S=8192, Dh=Dh)
+        row(f"fig12b_attn_d{Dh}", r["torchgt_s"] * 1e6,
+            f"dense={r['dense_s']*1e6:.0f}us "
+            f"speedup={r['speedup_vs_dense']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

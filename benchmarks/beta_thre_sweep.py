@@ -1,0 +1,38 @@
+"""Paper Table VIII: sensitivity of the transfer threshold beta_thre —
+epoch time vs test accuracy across the Auto Tuner ladder, plus the
+Auto Tuner's own (elastic) trajectory."""
+
+from __future__ import annotations
+
+from benchmarks.common import GraphTrainBench, row
+from repro.core.auto_tuner import AutoTuner
+
+
+def main(full=False):
+    epochs = 50 if not full else 100
+    base = GraphTrainBench(arch="graphormer_slim", n=512)
+    bg = base.g.sparsity
+    for mult, tag in [(1.0, "betaG"), (1.5, "1.5betaG"), (5.0, "5betaG"),
+                      (7.0, "7betaG"), (10.0, "10betaG")]:
+        bench = GraphTrainBench(arch="graphormer_slim", n=512,
+                                beta_thre=mult * bg)
+        hist, t_epoch, acc = bench.train("sparse", epochs=epochs)
+        row(f"tab8_beta_{tag}", t_epoch * 1e6,
+            f"test_acc={acc:.3f} "
+            f"density={bench.prep.layout.density():.4f} "
+            f"transferred={bench.prep.layout.stats['clusters_transferred']}")
+    # Auto Tuner trajectory on the LDR signal
+    tuner = AutoTuner(beta_g=bg, delta=5)
+    bench = GraphTrainBench(arch="graphormer_slim", n=512,
+                            beta_thre=tuner.beta_thre)
+    hist, t_epoch, acc = bench.train("torchgt", epochs=epochs)
+    path = [tuner.beta_thre]
+    for h in hist:
+        path.append(tuner.update(h["loss"], t_epoch))
+    row("tab8_autotuner", t_epoch * 1e6,
+        f"test_acc={acc:.3f} beta_path={path[0]:.4f}->{path[-1]:.4f} "
+        f"steps_up={sum(1 for a, b in zip(path, path[1:]) if b > a)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Table V: end-to-end training epoch time + test accuracy of
+GP-RAW / GP-FLASH / TorchGT on synthetic clustered graphs (SBM), for
+GPH_slim and GT model families (reduced configs, CPU)."""
+
+from __future__ import annotations
+
+from benchmarks.common import GraphTrainBench, row
+
+
+def main(full=False):
+    epochs = 60 if not full else 120
+    for arch in ("graphormer_slim", "gt"):
+        bench = GraphTrainBench(arch=arch, n=1024 if full else 512)
+        results = {}
+        for mode in ("raw", "flash", "torchgt"):
+            hist, t_epoch, acc = bench.train(mode, epochs=epochs)
+            results[mode] = (t_epoch, acc)
+            speed = results["flash"][0] / t_epoch if "flash" in results \
+                else 1.0
+            row(f"tab5_{arch}_{mode}", t_epoch * 1e6,
+                f"test_acc={acc:.3f} speedup_vs_flash={speed:.2f}x "
+                f"final_loss={hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

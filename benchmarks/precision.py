@@ -1,0 +1,22 @@
+"""Paper Table VII: BF16 vs FP32 TorchGT — throughput and accuracy.
+(The paper's point: GP-FLASH is locked to reduced precision; TorchGT can
+run FP32 and keep the accuracy while still being faster.)"""
+
+from __future__ import annotations
+
+from benchmarks.common import GraphTrainBench, row
+
+
+def main(full=False):
+    epochs = 50 if not full else 100
+    for dtype in ("bfloat16", "float32"):
+        bench = GraphTrainBench(arch="graphormer_slim", n=512, dtype=dtype)
+        hist, t_epoch, acc = bench.train("torchgt", epochs=epochs)
+        row(f"tab7_torchgt_{dtype}", t_epoch * 1e6, f"test_acc={acc:.3f}")
+    bench = GraphTrainBench(arch="graphormer_slim", n=512, dtype="bfloat16")
+    hist, t_epoch, acc = bench.train("flash", epochs=epochs)
+    row("tab7_gpflash_bf16", t_epoch * 1e6, f"test_acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Render the roofline markdown tables into EXPERIMENTS.md from the
+dry-run JSONL artifacts (idempotent: replaces the placeholder/previous
+tables between the HTML comment markers)."""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+
+def table_for(mesh: str) -> str:
+    path = f"experiments/dryrun_{mesh}.jsonl"
+    if not os.path.exists(path):
+        return "_(dry-run artifact missing)_"
+    rows = [json.loads(line) for line in open(path)]
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | roofline frac | useful | fits v5e | note |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant'].replace('_s','')} | {t['roofline_frac']:.2f} | "
+            f"{r['useful_compute_ratio']:.2f} | "
+            f"{'Y' if r['fits_v5e_hbm'] else 'N'} | {r['note']} |")
+    return "\n".join(out)
+
+
+def next_lever(r) -> str:
+    """One sentence per cell: what moves the dominant term down (spec
+    requirement, rule-based from the measured record)."""
+    dom = r["roofline"]["dominant"]
+    kind = ("train" if r["shape"].startswith("train") else
+            "prefill" if r["shape"].startswith("prefill") else "decode")
+    moe = "moe" in r["arch"] or "kimi" in r["arch"] or "jamba" in r["arch"]
+    if dom == "collective_s":
+        if kind == "train" and moe:
+            return ("a2a expert dispatch (volume ~k/P of the gather+"
+                    "psum_scatter combine) + overlap FSDP gathers with the "
+                    "previous layer's compute")
+        if kind == "train":
+            return ("bf16 gradient all-reduce (halves the remaining f32 AR)"
+                    " + double-buffered FSDP gather overlap")
+        return ("int8 serving weights halve the remaining weight gathers; "
+                "wider decode batches amortize them")
+    if dom == "memory_s":
+        if kind == "prefill":
+            return ("Pallas flash/cluster kernel keeps scores in VMEM — "
+                    "removes the score-matrix HBM round-trips the jnp "
+                    "lowering pays")
+        if kind == "decode":
+            return ("int8/fp8 KV-cache quantization halves cache streaming;"
+                    " speculative/grouped decode raises arithmetic "
+                    "intensity")
+        return "larger attention chunks / fused producer-consumer layouts"
+    return ("skip fully-masked causal blocks (the Pallas kernel does; the "
+            "jnp path computes then masks) and cut remat recompute with a "
+            "save-dots policy")
+
+
+def levers_section() -> str:
+    out = ["| cell | dominant | next lever |", "|---|---|---|"]
+    for mesh in ("16x16",):
+        path = f"experiments/dryrun_{mesh}.jsonl"
+        if not os.path.exists(path):
+            continue
+        for r in sorted(map(json.loads, open(path)),
+                        key=lambda r: (r["arch"], r["shape"])):
+            out.append(f"| {r['arch']} × {r['shape']} | "
+                       f"{r['roofline']['dominant'].replace('_s','')} | "
+                       f"{next_lever(r)} |")
+    return "\n".join(out)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    for mesh in ("16x16", "2x16x16"):
+        marker = f"<!-- ROOFLINE_TABLE_{mesh} -->"
+        block = marker + "\n\n" + table_for(mesh) + "\n"
+        pat = re.compile(re.escape(marker) + r"(?:\n\n\|.*?\n)?(?:\|.*\n)*",
+                         re.M)
+        if marker in text:
+            text = pat.sub(block, text)
+    marker = "<!-- NEXT_LEVERS -->"
+    if marker in text:
+        pat = re.compile(re.escape(marker) + r"(?:\n\n\|.*?\n)?(?:\|.*\n)*",
+                         re.M)
+        text = pat.sub(marker + "\n\n" + levers_section() + "\n", text)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables rendered.")
+
+
+if __name__ == "__main__":
+    main()

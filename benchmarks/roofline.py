@@ -1,0 +1,34 @@
+"""Roofline table (deliverable g): reads the dry-run JSONL artifacts and
+prints the per-cell three-term roofline + dominant bottleneck."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+
+def load(mesh="16x16", out_dir="experiments"):
+    path = os.path.join(out_dir, f"dryrun_{mesh}.jsonl")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(line) for line in f]
+
+
+def main(full=False):
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh):
+            t = r["roofline"]
+            row(f"roofline_{mesh}_{r['arch']}_{r['shape']}",
+                t["step_lower_bound_s"] * 1e6,
+                f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+                f"collective={t['collective_s']:.4f}s dom={t['dominant']} "
+                f"frac={t['roofline_frac']:.2f} "
+                f"useful={r['useful_compute_ratio']:.2f} "
+                f"fits={r['fits_v5e_hbm']}")
+
+
+if __name__ == "__main__":
+    main()

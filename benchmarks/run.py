@@ -1,0 +1,54 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig1_seq_len_accuracy", "benchmarks.seq_len_accuracy"),
+    ("fig2_tab2_attention_breakdown", "benchmarks.attention_breakdown"),
+    ("tab5_end_to_end", "benchmarks.end_to_end"),
+    ("tab7_precision", "benchmarks.precision"),
+    ("tab8_beta_thre", "benchmarks.beta_thre_sweep"),
+    ("fig7_fig9_scalability", "benchmarks.scalability"),
+    ("fig10_11_convergence", "benchmarks.convergence"),
+    ("fig12_attention_scaling", "benchmarks.attention_scaling"),
+    ("sec4e_preprocessing", "benchmarks.preprocessing"),
+    ("roofline_table", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for name, mod_name in SUITES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ({mod_name}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main(full=args.full)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+        print(f"# --- {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print("# FAILURES:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Paper Figs. 7 & 9: scalability.
+
+(a) Fig 9a — max trainable sequence length vs device count: analytic
+    activation-memory model calibrated by the dry-run memory analysis;
+    GP-RAW (O(S^2) scores) vs TorchGT (O(S) with graph parallelism).
+(b) §III-C comm-complexity claim — a2a volume O(S/P) vs all-gather O(S):
+    measured from compiled HLO at P in {2,4,8} (fake devices, subprocess).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import row
+
+HBM = 16e9  # v5e
+
+
+def max_seq_len(n_dev: int, *, d=64, n_layers=4, n_heads=8, mode: str):
+    """Largest S (per replica) fitting activation memory on n_dev chips."""
+    # bf16 activations; per layer: h (S,d) x ~8 buffers + attention
+    per_tok = 8 * d * 2 * n_layers
+    budget = n_dev * HBM * 0.6
+    if mode == "raw":
+        # dense scores (S, S) per head materialized (no flash): dominates
+        import math
+        a = n_heads * n_layers * 4.0
+        return int(math.sqrt(budget / a))
+    # torchgt: O(S) activations, sequence sharded over devices
+    return int(budget / per_tok)
+
+
+def comm_volume(p: int):
+    """Per-device a2a vs all-gather bytes for one attention layer at fixed
+    global S, measured from HLO on p fake devices."""
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={p}"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        import sys
+        sys.path.insert(0, {json.dumps(os.path.join(os.path.dirname(__file__), '..', 'src'))})
+        from repro.launch.hlo_analysis import analyze
+        mesh = jax.make_mesh(({p},), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        B, S, H, Dh = 1, 4096, {p}, 64
+        x = jax.ShapeDtypeStruct((B, S // {p}, H, Dh), jnp.bfloat16)
+
+        def a2a(q):
+            return jax.shard_map(
+                lambda ql: jax.lax.all_to_all(ql, "model", 2, 1, tiled=True),
+                mesh=mesh, in_specs=P(None, "model", None, None),
+                out_specs=P(None, None, "model", None), check_vma=False)(q)
+
+        def ag(q):
+            return jax.shard_map(
+                lambda ql: jax.lax.all_gather(ql, "model", axis=1,
+                                              tiled=True),
+                mesh=mesh, in_specs=P(None, "model", None, None),
+                out_specs=P(None, None, None, None), check_vma=False)(q)
+
+        for name, fn in (("a2a", a2a), ("ag", ag)):
+            txt = jax.jit(fn).lower(x).compile().as_text()
+            r = analyze(txt)
+            tot = sum(v for k, v in r["coll"].items() if k != "count")
+            print(name, int(tot))
+    """)
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=env)
+    out = {}
+    for line in r.stdout.splitlines():
+        parts = line.split()
+        if len(parts) == 2:
+            out[parts[0]] = int(parts[1])
+    return out
+
+
+def main(full=False):
+    for n_dev in (1, 8, 64, 256):
+        s_raw = max_seq_len(n_dev, mode="raw")
+        s_gt = max_seq_len(n_dev, mode="torchgt")
+        row(f"fig9a_maxseq_{n_dev}dev", 0.0,
+            f"gp_raw={s_raw} torchgt={s_gt} ratio={s_gt/max(s_raw,1):.0f}x")
+    for p in (2, 4, 8):
+        v = comm_volume(p)
+        if "a2a" in v and "ag" in v:
+            row(f"fig7_comm_P{p}", 0.0,
+                f"a2a_bytes={v['a2a']} allgather_bytes={v['ag']} "
+                f"ratio={v['ag']/max(v['a2a'],1):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

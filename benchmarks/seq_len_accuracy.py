@@ -1,0 +1,21 @@
+"""Paper Fig. 1: longer training sequences -> better accuracy. Node-level
+task where the sequence is a node subset of increasing size (small-S runs
+see fewer labeled nodes + less context per step)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GraphTrainBench, row
+
+
+def main(full=False):
+    epochs = 60 if not full else 120
+    for n in (128, 256, 512):
+        bench = GraphTrainBench(arch="graphormer_slim", n=n, seed=1)
+        hist, t_epoch, acc = bench.train("torchgt", epochs=epochs)
+        row(f"fig1_seqlen_{n}", t_epoch * 1e6, f"test_acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

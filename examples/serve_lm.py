@@ -1,0 +1,86 @@
+"""LM serving example: batched prefill + greedy decode with KV caches,
+on any `--arch` (reduced config on CPU). Demonstrates the TorchGT
+cluster-sparse decode path (`--sparse`: local window + global sinks —
+the long_500k cell's mechanism) vs full-cache attention.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3_0_6b --tokens 16
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.nn import param as nnp  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--sparse", action="store_true",
+                    help="TorchGT window+global decode masking")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.family == "graph":
+        raise SystemExit("graph transformers have no autoregressive decode")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: {model.n_params():,} params, "
+          f"batch={args.batch}, cache={args.cache_len}")
+
+    B = args.batch
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab_size // 8,
+                           (B, args.prompt_len)).astype(np.int32)
+
+    # ---- prefill: run the prompt token-by-token through the decode path
+    # (smoke-scale; production prefill uses model.prefill + cache export)
+    cache = nnp.init_tree(model.cache_defs(B, args.cache_len),
+                          jax.random.PRNGKey(1))
+    decode = jax.jit(lambda p, c, t, pos: model.decode(
+        p, c, t, pos, sparse=args.sparse))
+
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = decode(params, cache, jnp.asarray(prompts[:, i:i+1]),
+                               jnp.int32(i))
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # ---- greedy decode
+    out_tokens = []
+    tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.tokens):
+        out_tokens.append(np.asarray(tok)[:, 0])
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(args.prompt_len + i))
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack(out_tokens, 1)
+    print(f"prefill: {args.prompt_len} steps in {t_prefill:.2f}s; "
+          f"decode: {args.tokens} tokens in {t_decode:.2f}s "
+          f"({B*args.tokens/t_decode:.1f} tok/s, mode="
+          f"{'cluster-sparse' if args.sparse else 'full-cache'})")
+    print("generated (first request):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

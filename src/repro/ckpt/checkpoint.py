@@ -1,0 +1,140 @@
+"""Sharded, async, elastic checkpointing.
+
+Format: a step directory ``step_{n:08d}/`` containing one ``.npy.zst`` blob
+per tree leaf (zstd-compressed raw array) plus ``manifest.json`` (paths,
+shapes, dtypes, step metadata). Writes go to ``.tmp-*`` and are renamed
+atomically; a ``COMMITTED`` marker makes partially-written checkpoints
+invisible to ``latest_step``.
+
+* async: ``save`` snapshots to host memory (device_get) synchronously —
+  cheap — then compresses/writes on a background thread so training
+  continues; ``wait`` joins before the next save or exit.
+* elastic: arrays are saved whole (gathered); ``restore`` places each leaf
+  with the *target* sharding, so the same checkpoint restores onto any
+  mesh shape (tested: 1 -> 8 devices and back). At true multi-pod scale
+  the same manifest format extends to per-shard blobs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+import zstandard
+
+SEP = "/"
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        out = {}
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+        return out
+    return {SEP.join(prefix): tree}
+
+
+def _unflatten(flat):
+    root: dict = {}
+    for path, v in flat.items():
+        parts = path.split(SEP)
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------ save
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        self.wait()
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp-{step:08d}")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            cctx = zstandard.ZstdCompressor(level=1)
+            manifest = {"step": step, "leaves": {}}
+            for i, (k, v) in enumerate(host.items()):
+                fn = f"leaf_{i:05d}.npy.zst"
+                with open(os.path.join(tmp, fn), "wb") as f:
+                    f.write(cctx.compress(v.tobytes()))  # ml_dtypes handles bf16
+                manifest["leaves"][k] = {
+                    "file": fn, "shape": list(v.shape), "dtype": str(v.dtype)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+                f.write("ok")
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------ load
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "COMMITTED")):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, *, shardings=None, abstract=None):
+        """shardings: optional pytree of jax.sharding.Sharding (elastic
+        placement); abstract: optional pytree of ShapeDtypeStruct to
+        validate/convert against."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        dctx = zstandard.ZstdDecompressor()
+        flat = {}
+        for k, meta in manifest["leaves"].items():
+            with open(os.path.join(d, meta["file"]), "rb") as f:
+                raw = dctx.decompress(f.read())
+            arr = np.frombuffer(raw, np.dtype(meta["dtype"])).reshape(
+                meta["shape"])
+            flat[k] = arr
+        tree = _unflatten(flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        elif abstract is not None:
+            tree = jax.tree.map(lambda a, sd: jax.numpy.asarray(
+                a, dtype=sd.dtype), tree, abstract)
+        return tree

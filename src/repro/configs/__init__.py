@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_ARCHS,
+    ASSIGNED_ARCHS,
+    PAPER_ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cells,
+    get_config,
+    get_smoke_config,
+)

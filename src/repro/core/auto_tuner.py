@@ -1,0 +1,99 @@
+"""Auto Tuner (paper §III-D): elastic transfer threshold + tile sizing.
+
+* beta_thre controller: tracks the running-average loss
+  F_t = 0.9 F_{t-1} + 0.1 L_t and the Loss Descent Rate
+  LDR_t = (F_t - F_{t-1}) / epoch_time. When LDR is not degrading vs
+  delta(=10) epochs ago, move beta_thre UP the ladder
+  {0, bG, 1.5bG, 5bG, 7bG, 10bG, 1} (more clusters transferred -> faster);
+  otherwise step back DOWN (more fidelity -> better convergence).
+
+* TPU tile model (hardware adaptation of the paper's L1/L2 model, see
+  DESIGN.md §2): block sizes must align to the MXU lane width (128); the
+  per-step VMEM working set (q block + mb gathered k/v blocks + score
+  block + accumulator) must fit the ~16 MiB/core VMEM budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class AutoTuner:
+    beta_g: float
+    delta: int = 10
+    ema: float = 0.9
+    _ladder: tuple = ()
+    _pos: int = 1
+    _f: list = dataclasses.field(default_factory=list)
+    _ldr: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self._ladder:
+            bg = self.beta_g
+            self._ladder = (0.0, bg, 1.5 * bg, 5 * bg, 7 * bg, 10 * bg, 1.0)
+        self._pos = 1  # start at beta_G (paper §III-D)
+
+    @property
+    def beta_thre(self) -> float:
+        return self._ladder[self._pos]
+
+    def update(self, loss: float, epoch_time: float) -> float:
+        """Feed one epoch's (loss, wall time); returns the new beta_thre."""
+        f_prev = self._f[-1] if self._f else loss
+        f = self.ema * f_prev + (1 - self.ema) * loss
+        self._f.append(f)
+        ldr = (f - f_prev) / max(epoch_time, 1e-9)  # negative = improving
+        self._ldr.append(ldr)
+        if len(self._ldr) > self.delta:
+            if ldr <= self._ldr[-1 - self.delta]:
+                # descending at least as fast as delta epochs ago -> speed up
+                self._pos = min(self._pos + 1, len(self._ladder) - 1)
+            else:
+                # converging/degrading -> back off for fidelity
+                self._pos = max(self._pos - 1, 0)
+        return self.beta_thre
+
+
+VMEM_BYTES = 16 * 1024 * 1024     # v5e per-core VMEM
+LANE = 128                        # MXU/VREG lane width
+
+
+def choose_tpu_tiles(d_head: int, mb: int, dtype_bytes: int = 2,
+                     vmem_budget: float = 0.75):
+    """Pick (bq, bk, d_b) for the cluster kernel so the working set
+    (q + mb*(k+v) + scores + acc, double-buffered) fits VMEM.
+
+    Returns dict with tile sizes and the modeled VMEM bytes."""
+    budget = VMEM_BYTES * vmem_budget
+    d_b = LANE                       # sub-block = MXU tile (TPU adaptation)
+    best = None
+    for bq in (512, 256, 128):
+        for bk in (256, 128):
+            work = (
+                bq * d_head * dtype_bytes          # q block
+                + 2 * mb * bk * d_head * dtype_bytes  # gathered k,v
+                + bq * mb * bk * 4                 # f32 scores
+                + bq * d_head * 4                  # f32 accumulator
+            ) * 2                                  # double buffering
+            if work <= budget:
+                cand = {"bq": bq, "bk": bk, "d_b": d_b, "vmem_bytes": work}
+                if best is None or bq * bk > best["bq"] * best["bk"]:
+                    best = cand
+    if best is None:
+        best = {"bq": LANE, "bk": LANE, "d_b": d_b,
+                "vmem_bytes": (LANE * d_head * dtype_bytes * 3
+                               + LANE * mb * LANE * 4) * 2}
+    return best
+
+
+def choose_cluster_dim(seq_len: int, d_model: int, bq: int = 128) -> int:
+    """Cluster dimensionality k — adapted from the paper's L2 formula
+    k = floor(sqrt(Q_L2 / (i*d))): clusters should tile into VMEM-sized
+    panels; we bound cluster side to a multiple of bq that keeps the
+    per-cluster k/v panel within ~1/4 VMEM."""
+    panel = VMEM_BYTES // 4
+    side = max(bq, min(seq_len,
+                       (panel // max(d_model, 1) // bq) * bq or bq))
+    k = max(1, seq_len // side)
+    return k

@@ -1,0 +1,144 @@
+"""Graph data pipeline: graph -> cluster reorder -> condition check ->
+elastic reformation layout -> jnp-ready batch.
+
+This is the host-side preprocessing the paper amortizes over training
+(§IV-E: <=5.4% of train time); its cost is measured in
+benchmarks/preprocessing.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.auto_tuner import choose_cluster_dim
+from repro.core.conditions import ConditionReport, check_conditions
+from repro.core.encodings import degree_clip, lap_pe, spd_matrix
+from repro.core.graph import Graph
+from repro.core.reformation import ClusterLayout, build_layout
+from repro.core.reorder import cluster_reorder, cut_ratio
+
+
+@dataclasses.dataclass
+class PreparedGraph:
+    batch: dict                 # numpy arrays, jit-ready
+    layout: ClusterLayout
+    report: ConditionReport
+    cut: float
+    prep_seconds: float
+
+
+def prepare_node_task(g: Graph, cfg, *, beta_thre: float | None = None,
+                      bq: int = 128, bk: int = 128, d_b: int = 16,
+                      k_clusters: int | None = None,
+                      train_mask: np.ndarray | None = None,
+                      with_buckets: bool = True,
+                      seed: int = 0) -> PreparedGraph:
+    """Single-graph node classification: one sequence of all nodes
+    (B=1), global tokens prepended."""
+    t0 = time.perf_counter()
+    while bq > 8 and (g.n + cfg.n_global) < 4 * bq:
+        bq //= 2
+        bk //= 2
+    k_clusters = k_clusters or choose_cluster_dim(g.n, cfg.d_model, bq)
+    perm, assign = cluster_reorder(g, k_clusters, seed=seed)
+    gp = g.permuted(perm)
+    # conditions are checked on the AUGMENTED pattern the layout actually
+    # uses (self loops C1, chain C2, global-token edges C3)
+    from repro.core.reformation import augment_edges
+    ar, ac, s0 = augment_edges(gp, cfg.n_global, chain=True)
+    gaug = Graph(s0, ar.astype(np.int32), ac.astype(np.int32))
+    report = check_conditions(gaug, cfg.n_layers)
+
+    spd = None
+    if cfg.graph_bias == "spd":
+        spd = spd_matrix(gc, cfg.max_spd)
+    layout = build_layout(
+        gp, bq=bq, bk=bk, k_clusters=k_clusters, d_b=d_b,
+        beta_thre=beta_thre, n_global=cfg.n_global, chain=True,
+        buckets=with_buckets, spd=spd, max_spd=cfg.max_spd)
+
+    S = layout.seq_len
+    ng = cfg.n_global
+    feat = np.zeros((1, S, cfg.feat_dim), np.float32)
+    feat[0, ng:ng + g.n] = gp.feat
+    ind, outd = gp.degrees()
+    in_deg = np.zeros((1, S), np.int32)
+    out_deg = np.zeros((1, S), np.int32)
+    in_deg[0, ng:ng + g.n] = degree_clip(ind, cfg.max_degree)
+    out_deg[0, ng:ng + g.n] = degree_clip(outd, cfg.max_degree)
+    labels = np.full((1, S), -1, np.int32)
+    lab = gp.labels.copy()
+    if train_mask is not None:
+        tm = train_mask[perm]
+        lab = np.where(tm, lab, -1)
+    labels[0, ng:ng + g.n] = lab
+
+    batch = {
+        "feat": feat,
+        "in_deg": in_deg,
+        "out_deg": out_deg,
+        "labels": labels,
+        "block_idx": layout.block_idx[None],
+    }
+    if layout.buckets is not None:
+        batch["buckets"] = layout.buckets[None]
+    if cfg.name.startswith("gt"):
+        pe = np.zeros((1, S, 8), np.float32)
+        pe[0, ng:ng + g.n] = lap_pe(gp)
+        batch["lap_pe"] = pe
+    cut = cut_ratio(gp, assign[perm])
+    return PreparedGraph(batch, layout, report, cut,
+                         time.perf_counter() - t0)
+
+
+def prepare_graph_task(graphs: list[Graph], cfg, *, bq: int = 32,
+                       bk: int = 32, d_b: int = 8,
+                       beta_thre: float | None = None,
+                       seed: int = 0) -> PreparedGraph:
+    """Graph-level classification: each sequence is one (small) graph,
+    label sits on the global token (position 0)."""
+    t0 = time.perf_counter()
+    smax = max(gr.n for gr in graphs) + cfg.n_global
+    prepared = []
+    for gr in graphs:
+        k = max(1, min(4, gr.n // (2 * bq) or 1))
+        perm, assign = cluster_reorder(gr, k, seed=seed)
+        gp = gr.permuted(perm)
+        spd = spd_matrix(gp.with_self_loops(), cfg.max_spd) \
+            if cfg.graph_bias == "spd" else None
+        lay = build_layout(gp, bq=bq, bk=bk, k_clusters=k, d_b=d_b,
+                           beta_thre=beta_thre, n_global=cfg.n_global,
+                           chain=True, buckets=True, spd=spd,
+                           max_spd=cfg.max_spd)
+        prepared.append((gp, lay))
+    S = max(lay.seq_len for _, lay in prepared)
+    S = -(-S // bq) * bq
+    mb = max(lay.mb for _, lay in prepared)
+    B = len(graphs)
+    ng = cfg.n_global
+    feat = np.zeros((B, S, cfg.feat_dim), np.float32)
+    in_deg = np.zeros((B, S), np.int32)
+    out_deg = np.zeros((B, S), np.int32)
+    labels = np.full((B, S), -1, np.int32)
+    block_idx = np.full((B, S // bq, mb), -1, np.int32)
+    buckets = np.full((B, S // bq, mb, bq, bk), -1, np.int8)
+    for i, (gp, lay) in enumerate(prepared):
+        feat[i, ng:ng + gp.n] = gp.feat
+        ind, outd = gp.degrees()
+        in_deg[i, ng:ng + gp.n] = degree_clip(ind, cfg.max_degree)
+        out_deg[i, ng:ng + gp.n] = degree_clip(outd, cfg.max_degree)
+        labels[i, 0] = gp.labels[0]  # graph label (stored on node 0)
+        nq_i = lay.block_idx.shape[0]
+        block_idx[i, :nq_i, :lay.mb] = lay.block_idx
+        if lay.buckets is not None:
+            buckets[i, :nq_i, :lay.mb] = lay.buckets
+    batch = {"feat": feat, "in_deg": in_deg, "out_deg": out_deg,
+             "labels": labels, "block_idx": block_idx, "buckets": buckets}
+    layout = ClusterLayout(S, bq, bk, block_idx[0], buckets[0],
+                           prepared[0][1].n_buckets, prepared[0][1].stats)
+    report = check_conditions(prepared[0][0].with_self_loops(), cfg.n_layers)
+    return PreparedGraph(batch, layout, report, 0.0,
+                         time.perf_counter() - t0)

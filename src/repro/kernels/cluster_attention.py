@@ -1,0 +1,219 @@
+"""Cluster-sparse attention Pallas kernel — the Elastic Computation
+Reformation kernel (paper §III-D), adapted to TPU (DESIGN.md §2).
+
+The GPU version fights irregular memory access with L1/L2-tuned sub-block
+gathers; on TPU we eliminate the irregularity structurally:
+
+* the layout builder (core/reformation.py) emits, per q-block row, the list
+  of k-blocks to visit (``block_idx``, -1 padded) — everything inside a
+  visited block is dense, MXU-shaped work;
+* ``block_idx`` is *scalar-prefetched* (PrefetchScalarGridSpec) so the
+  index stream is known to the DMA engine ahead of the compute — the
+  gather becomes a sequence of contiguous HBM->VMEM block copies that
+  double-buffer behind the MXU;
+* padded (-1) entries skip compute with pl.when (they still index block 0
+  for the DMA, which is harmless and keeps the pipeline static);
+* optional int8 ``buckets`` blocks carry the bias bucket / mask per
+  position (graph mode); bias_table is a small (H, n_buckets) VMEM-resident
+  lookup.
+
+Grid (BH, nq, mb); online-softmax scratch carried over mb.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _cluster_kernel(idx_ref,                 # scalar-prefetch (nq, mb)
+                    q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                    sm_scale, causal, block_q, block_k, n_heads):
+    qi = pl.program_id(1)
+    mi = pl.program_id(2)
+    mb = pl.num_programs(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    blk = idx_ref[qi, mi]
+
+    @pl.when(blk >= 0)
+    def _compute():
+        q = q_ref[0].astype(F32)
+        k = k_ref[0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * sm_scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = blk * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(F32), (((1,), (0,)), ((), ())),
+            preferred_element_type=F32)
+        m_s[...] = m_new
+
+    @pl.when(mi == mb - 1)
+    def _finalize():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
+                           o_ref, m_s, l_s, acc_s, *,
+                           sm_scale, causal, block_q, block_k, n_heads):
+    """Variant with int8 bucket masks + per-head bias table (graph mode)."""
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    mi = pl.program_id(2)
+    mb = pl.num_programs(2)
+    h = bh % n_heads
+
+    @pl.when(mi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    blk = idx_ref[qi, mi]
+
+    @pl.when(blk >= 0)
+    def _compute():
+        q = q_ref[0].astype(F32)
+        k = k_ref[0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * sm_scale
+        bkt = bkt_ref[0, 0].astype(jnp.int32)          # (bq, bk)
+        table = bias_ref[h]                            # (n_buckets,)
+        bias = jnp.take(table, jnp.maximum(bkt, 0), axis=0)
+        s = jnp.where(bkt >= 0, s + bias, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        m_new = jnp.maximum(m_new, NEG_INF)            # all-masked guard
+        p = jnp.where(m_new <= NEG_INF, 0.0, jnp.exp(s - m_new))
+        corr = jnp.exp(jnp.maximum(m_prev, NEG_INF) - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(F32), (((1,), (0,)), ((), ())),
+            preferred_element_type=F32)
+        m_s[...] = m_new
+
+    @pl.when(mi == mb - 1)
+    def _finalize():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
+                      causal: bool = False, interpret: bool = False):
+    """q (B,S,H,Dh); k/v (B,S,KV,Dh); block_idx (nq, mb) int32 shared across
+    the batch (per-graph layouts: vmap/loop at the caller);
+    buckets (nq, mb, bq, bk) int8 optional; bias_table (H, n_buckets).
+    Block sizes are implied: bq = S // nq, bk from buckets or = bq."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    nq, mb = block_idx.shape
+    bq = S // nq
+    bk = buckets.shape[-1] if buckets is not None else bq
+    sm_scale = Dh ** -0.5
+
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, Dh)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * KV, S, Dh)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * KV, S, Dh)
+    safe_idx = block_idx  # kernel skips <0; DMA clamps via index_map max(0)
+
+    def q_map(bh, qi, mi, idx_ref=None):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, mi, idx_ref=None):
+        row = jnp.maximum(idx_ref[qi, mi], 0)
+        return ((bh // H) * KV + (bh % H) // G, row, 0)
+
+    grid = (B * H, nq, mb)
+    scratch = [pltpu.VMEM((bq, 1), F32), pltpu.VMEM((bq, 1), F32),
+               pltpu.VMEM((bq, Dh), F32)]
+
+    if buckets is None:
+        kernel = functools.partial(
+            _cluster_kernel, sm_scale=sm_scale, causal=causal, block_q=bq,
+            block_k=bk, n_heads=H)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, Dh),
+                             lambda bh, qi, mi, idx: (bh, qi, 0)),
+                pl.BlockSpec((1, bk, Dh),
+                             lambda bh, qi, mi, idx: (
+                                 (bh // H) * KV + (bh % H) // G,
+                                 jnp.maximum(idx[qi, mi], 0), 0)),
+                pl.BlockSpec((1, bk, Dh),
+                             lambda bh, qi, mi, idx: (
+                                 (bh // H) * KV + (bh % H) // G,
+                                 jnp.maximum(idx[qi, mi], 0), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, Dh),
+                                   lambda bh, qi, mi, idx: (bh, qi, 0)),
+            scratch_shapes=scratch,
+        )
+        out = pl.pallas_call(
+            kernel, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
+            interpret=interpret,
+        )(safe_idx, qt, kt, vt)
+    else:
+        if bias_table is None:
+            bias_table = jnp.zeros((H, int(buckets.max()) + 1
+                                    if buckets.size else 1), F32)
+        kernel = functools.partial(
+            _cluster_kernel_biased, sm_scale=sm_scale, causal=causal,
+            block_q=bq, block_k=bk, n_heads=H)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, Dh),
+                             lambda bh, qi, mi, idx: (bh, qi, 0)),
+                pl.BlockSpec((1, bk, Dh),
+                             lambda bh, qi, mi, idx: (
+                                 (bh // H) * KV + (bh % H) // G,
+                                 jnp.maximum(idx[qi, mi], 0), 0)),
+                pl.BlockSpec((1, bk, Dh),
+                             lambda bh, qi, mi, idx: (
+                                 (bh // H) * KV + (bh % H) // G,
+                                 jnp.maximum(idx[qi, mi], 0), 0)),
+                pl.BlockSpec((1, 1, bq, bk),
+                             lambda bh, qi, mi, idx: (qi, mi, 0, 0)),
+                pl.BlockSpec((H, bias_table.shape[1]),
+                             lambda bh, qi, mi, idx: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, Dh),
+                                   lambda bh, qi, mi, idx: (bh, qi, 0)),
+            scratch_shapes=scratch,
+        )
+        out = pl.pallas_call(
+            kernel, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
+            interpret=interpret,
+        )(safe_idx, qt, kt, vt, buckets, bias_table.astype(F32))
+    out = out.reshape(B, H, S, Dh)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,123 @@
+"""Dense flash attention Pallas kernel (TPU target) — the GP-FLASH
+baseline of the paper.
+
+Layout: q (BH, Sq, Dh), k/v (BKV, Sk, Dh) — batch*heads collapsed; GQA is
+handled in the index maps (q head -> kv head), so kv is never repeated in
+HBM. Grid (BH, nq, nk): the nk axis is innermost/sequential, with the
+online-softmax state (m, l, acc) in VMEM scratch carried across k blocks.
+Causal fully-masked blocks are skipped with pl.when (no wasted MXU work —
+unlike the jnp oracle, which computes-then-masks).
+
+Validated in interpret mode against ref.py (pure jnp) over shape/dtype
+sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    if causal:
+        run = (qi + 1) * block_q > ki * block_k  # block has unmasked cells
+    else:
+        run = ki >= 0
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(F32)                 # (bq, d)
+        k = k_ref[0].astype(F32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * sm_scale
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(F32), (((1,), (0,)), ((), ())),
+            preferred_element_type=F32)
+        m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh). Returns (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    sm_scale = Dh ** -0.5
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    sq_p, sk_p = nq * bq, nk * bk
+
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, Dh)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, Dh)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, Dh)
+    if sq_p != Sq:
+        qt = jnp.pad(qt, ((0, 0), (0, sq_p - Sq), (0, 0)))
+    if sk_p != Sk:
+        kt = jnp.pad(kt, ((0, 0), (0, sk_p - Sk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, sk_p - Sk), (0, 0)))
+
+    def kv_map(bh, qi, ki):
+        return ((bh // H) * KV + (bh % H) // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                          block_q=bq, block_k=bk, seq_k=Sk),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_map),
+            pl.BlockSpec((1, bk, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, sq_p, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), F32),
+            pltpu.VMEM((bq, 1), F32),
+            pltpu.VMEM((bq, Dh), F32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :Sq].reshape(B, H, Sq, Dh)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,54 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+
+``use_pallas()`` resolves the execution path once per process:
+  - TPU backend      -> compiled Pallas kernels (production path)
+  - CPU/GPU backend  -> jnp oracles (same math; CI / laptop path)
+  - REPRO_FORCE_PALLAS=interpret -> Pallas in interpret mode (kernel-body
+    semantics on CPU; used by the kernel test suite).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import cluster_attention as _ca
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd as _ssd
+
+
+def _mode() -> str:
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force:
+        return force  # "interpret" | "compiled" | "ref"
+    return "compiled" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+    m = _mode()
+    if m == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=(m == "interpret"))
+
+
+def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
+                      causal=False):
+    m = _mode()
+    if m == "ref":
+        return _ref.cluster_attention_ref(q, k, v, block_idx, buckets,
+                                          bias_table, causal=causal)
+    return _ca.cluster_attention(q, k, v, block_idx, buckets, bias_table,
+                                 causal=causal,
+                                 interpret=(m == "interpret"))
+
+
+def ssd(x, dt, a, b, c, *, chunk=256):
+    m = _mode()
+    if m == "ref":
+        return _ref.ssd_ref(x, dt, a, b, c, chunk)
+    return _ssd.ssd(x, dt, a, b, c, chunk=chunk,
+                    interpret=(m == "interpret"))

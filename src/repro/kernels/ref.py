@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract: kernels must
+match these to numerical tolerance across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dual_attention import cluster_sparse_attention
+from repro.models.layers import chunked_attention
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    return chunked_attention(q, k, v, causal=causal, chunk_q=max(
+        16, q.shape[1] // 4), chunk_k=max(16, k.shape[1] // 4))
+
+
+def cluster_attention_ref(q, k, v, block_idx, buckets=None, bias_table=None,
+                          *, causal=False):
+    nq, mb = block_idx.shape
+    bq = q.shape[1] // nq
+    bk = buckets.shape[-1] if buckets is not None else bq
+    B = q.shape[0]
+    bi = jnp.broadcast_to(block_idx[None], (B, nq, mb))
+    bu = None if buckets is None else jnp.broadcast_to(
+        buckets[None], (B,) + buckets.shape)
+    rc = 2 if nq % 2 == 0 else 1
+    return cluster_sparse_attention(q, k, v, bi, bu, bias_table, bq=bq,
+                                    bk=bk, causal=causal, row_chunk=rc)
+
+
+def ssd_ref(x, dt, a, b, c, chunk):
+    return ssd_chunked(x, dt, a, b, c, chunk)

@@ -1,0 +1,114 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+Per (batch*head) program, the chunk axis is the sequential grid dimension;
+the (dh, N) SSM state lives in VMEM scratch and is carried across chunks.
+Within a chunk the dual quadratic form runs on the MXU:
+
+    y_intra = ((C B^T) .* L) (dt .* x)       L = tril(exp(seg-sums))
+    y_inter = exp(cum) * (C S_prev^T)
+    S_new   = exp(total) S_prev + X^T (decay dt .* B)
+
+The cumulative sums are realized as lower-triangular matmuls (MXU-friendly,
+no serial scan inside the kernel).
+
+Oracle: models/ssm.ssd_chunked (ref.ssd_ref); swept in tests/test_kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                s_scratch, *, chunk: int, dh: int, n: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    x = x_ref[0].astype(F32)            # (Q, dh)
+    dt = dt_ref[0].astype(F32)          # (Q, 1)
+    a = a_ref[0, 0].astype(F32)         # scalar
+    b = b_ref[0].astype(F32)            # (Q, N)
+    c = c_ref[0].astype(F32)            # (Q, N)
+
+    da = dt * a                         # (Q, 1) negative
+    tril = jnp.tril(jnp.ones((chunk, chunk), F32))
+    cum = jax.lax.dot_general(tril, da, (((1,), (0,)), ((), ())),
+                              preferred_element_type=F32)   # (Q,1) inclusive
+    total = cum[chunk - 1:chunk, :]     # (1,1)
+
+    seg = cum - cum.reshape(1, chunk)   # cum_q - cum_t; valid entries <= 0
+    L = jnp.where(jnp.tril(jnp.ones((chunk, chunk), jnp.bool_)),
+                  jnp.exp(jnp.minimum(seg, 0.0)), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)    # (Q,Q)
+    w = cb * L
+    xdt = x * dt                        # (Q, dh)
+    y_intra = jax.lax.dot_general(w, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=F32)
+
+    s_prev = s_scratch[...]             # (dh, N)
+    y_inter = jnp.exp(cum) * jax.lax.dot_general(
+        c, s_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=F32)     # (Q, dh)
+
+    decay_end = jnp.exp(total - cum)    # (Q,1)
+    upd = jax.lax.dot_general(x, b * (decay_end * dt),
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=F32)   # (dh, N)
+    s_scratch[...] = s_prev * jnp.exp(total) + upd
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_ref[0] = s_scratch[...].astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, *, chunk: int = 256, interpret: bool = False):
+    """x (B,S,H,dh); dt (B,S,H); a (H,); b,c (B,S,N).
+    Returns (y (B,S,H,dh), final_state (B,H,dh,N))."""
+    B, S, H, dh = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    xt = jnp.moveaxis(x, 2, 1).reshape(B * H, S, dh)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(B * H, S, 1)
+    at = jnp.tile(a[None, :], (B, 1)).reshape(B * H, 1)
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=Q, dh=dh, n=N),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, dh), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh // H, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh // H, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, dh), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, dh, N), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, dh), x.dtype),
+            jax.ShapeDtypeStruct((B * H, dh, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, N), F32)],
+        interpret=interpret,
+    )(xt, dtt, at, b, c)
+    y = jnp.moveaxis(y.reshape(B, H, S, dh), 1, 2)
+    return y, state.reshape(B, H, dh, N)

@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) cell on the production meshes, print
+memory_analysis / cost_analysis, extract roofline terms.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init) — hence the two lines above.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_1_7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/]
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, cells, get_config  # noqa: E402
+from repro.launch.hlo_analysis import analyze                         # noqa: E402
+from repro.launch.mesh import make_production_mesh                   # noqa: E402
+from repro.launch.roofline import (active_params, model_flops,        # noqa: E402
+                                   roofline_terms)
+from repro.launch.steps import build_cell, lower_cell                 # noqa: E402
+
+V5E_HBM = 16 * 1024 ** 3
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, overrides=None, ulysses=None) -> dict:
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cell = build_cell(arch, shape_name, mesh, overrides=overrides,
+                      ulysses=ulysses)
+    lowered = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops_raw = float(ca.get("flops", 0.0))
+    bytes_raw = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    # trip-count-aware totals (XLA cost_analysis counts loop bodies once —
+    # see launch/hlo_analysis.py)
+    hstats = analyze(hlo)
+    flops = hstats["flops"]
+    coll = hstats["coll"]
+    # memory traffic: loop-corrected dot I/O is the matmul floor; raw
+    # cost_analysis adds non-dot traffic but undercounts loops — take max.
+    bytes_accessed = max(bytes_raw, hstats["io"])
+    terms = roofline_terms(flops, bytes_accessed, coll)
+
+    cfg = cell["cfg"]
+    shape = cell["shape"]
+    mf = model_flops(cfg, cell["model"], shape)
+    per_dev_model_flops = mf / n_dev
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "note": cell["note"],
+        "recipe": cell["recipe"].name,
+        "compile_s": round(time.perf_counter() - t0, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_est_bytes": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "fits_v5e_hbm": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                         + ma.output_size_in_bytes
+                         - ma.alias_size_in_bytes) <= V5E_HBM,
+        "flops_per_dev": flops,
+        "bytes_per_dev": bytes_accessed,
+        "flops_per_dev_raw_costanalysis": flops_raw,
+        "bytes_per_dev_raw_costanalysis": bytes_raw,
+        "dot_io_bytes_per_dev": hstats["io"],
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_total": mf,
+        "model_flops_per_dev": per_dev_model_flops,
+        "useful_compute_ratio": (per_dev_model_flops / flops)
+        if flops else 0.0,
+        "n_params": cell["model"].n_params(),
+        "n_active_params": active_params(cfg, cell["model"]),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} ({rec['mesh']}) "
+              f"recipe={rec['recipe']} {rec['note']}")
+        print("  memory_analysis:", ma)
+        print("  cost_analysis: flops/dev={:.3e} bytes/dev={:.3e}".format(
+            flops, bytes_accessed))
+        print("  collectives:", {k: v for k, v in coll.items() if v})
+        print("  roofline: compute={compute_s:.4f}s memory={memory_s:.4f}s "
+              "collective={collective_s:.4f}s dominant={dominant} "
+              "frac={roofline_frac:.2f}".format(**terms))
+        print(f"  useful_compute_ratio={rec['useful_compute_ratio']:.2f} "
+              f"fits_v5e={rec['fits_v5e_hbm']} "
+              f"compile={rec['compile_s']}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = [(a, s) for a, s, _ in cells()]
+    else:
+        archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        todo = [(a, s) for a in archs for s in shapes]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        tag = "2x16x16" if multi_pod else "16x16"
+        path = os.path.join(args.out, f"dryrun_{tag}.jsonl")
+        done = set()
+        if os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"]))
+        with open(path, "a") as f:
+            for arch, shape in todo:
+                if (arch, shape) in done:
+                    print(f"-- skip (cached) {arch} x {shape} ({tag})")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, multi_pod=multi_pod)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape, tag, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for fl in failures:
+            print(" ", fl)
+        raise SystemExit(1)
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Paper-architecture scale demonstration: dry-run the paper's own graph
+transformers (Graphormer_slim/large, GT) at the paper's headline sequence
+lengths — 256K and 1M graph tokens — under Cluster-aware Graph Parallelism
+(Ulysses a2a) on the production mesh. Reproduces Fig. 9a's deployability
+claim as a compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.graph_dryrun [--seq 1048576]
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.graph_model import graph_loss  # noqa: E402
+from repro.launch.hlo_analysis import analyze  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import roofline_terms  # noqa: E402
+from repro.launch.steps import (make_train_step, state_shardings,  # noqa: E402
+                                train_state_defs)
+from repro.models import build  # noqa: E402
+from repro.nn import param as nnp  # noqa: E402
+from repro.parallel.sharding import recipe_for  # noqa: E402
+
+
+def graph_batch_spec(cfg, S: int, mb: int = 16, bq: int = 128):
+    """ShapeDtypeStructs for a node-level graph batch at sequence S.
+    mask-free cluster-sparse mode (buckets omitted — the reformed layout at
+    1M tokens is pure dense sub-blocks, bias via degree encodings)."""
+    nq = S // bq
+    i32 = jnp.int32
+    return {
+        "feat": jax.ShapeDtypeStruct((1, S, cfg.feat_dim), jnp.bfloat16),
+        "in_deg": jax.ShapeDtypeStruct((1, S), i32),
+        "out_deg": jax.ShapeDtypeStruct((1, S), i32),
+        "labels": jax.ShapeDtypeStruct((1, S), i32),
+        "block_idx": jax.ShapeDtypeStruct((1, nq, mb), i32),
+    }
+
+
+def run(arch: str, S: int, multi_pod: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch).replace(graph_bias=None)  # 1M: no bias table
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig(f"graph_{S}", "train", S, 1)
+    recipe = recipe_for(shape, mesh, ulysses=True)
+    model = build(cfg)
+    st_defs = train_state_defs(model)
+    st_abs = nnp.abstract_tree(st_defs)
+    st_shard = state_shardings(st_defs, recipe, mesh)
+    batch = graph_batch_spec(cfg, S)
+    dp = recipe.acts.get("batch")
+    seq = recipe.acts.get("seq_outer")
+    bshard = {
+        "feat": NamedSharding(mesh, nnp.fit_spec(batch["feat"].shape,
+                                                 (dp, seq, None), mesh)),
+        "in_deg": NamedSharding(mesh, nnp.fit_spec(batch["in_deg"].shape,
+                                                   (dp, seq), mesh)),
+        "out_deg": NamedSharding(mesh, nnp.fit_spec(batch["out_deg"].shape,
+                                                    (dp, seq), mesh)),
+        "labels": NamedSharding(mesh, nnp.fit_spec(batch["labels"].shape,
+                                                   (dp, seq), mesh)),
+        "block_idx": NamedSharding(mesh, P()),
+    }
+    step = make_train_step(model, recipe, mesh)
+    jf = jax.jit(step, in_shardings=((st_shard, bshard)), donate_argnums=(0,))
+    with mesh:
+        lowered = jf.lower(st_abs, batch)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    st = analyze(compiled.as_text())
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    terms = roofline_terms(st["flops"],
+                           max(float(ca.get("bytes accessed", 0)), st["io"]),
+                           st["coll"])
+    peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    rec = {"arch": arch, "seq": S, "mesh": "2x16x16" if multi_pod
+           else "16x16", "peak_gb": round(peak / 1e9, 2),
+           "fits_v5e": peak <= 16 * 1024 ** 3,
+           "roofline": {k: (round(v, 4) if isinstance(v, float) else v)
+                        for k, v in terms.items()}}
+    print(json.dumps(rec))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="graphormer_large")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    seqs = [args.seq] if args.seq else [262_144, 1_048_576]
+    out = []
+    for S in seqs:
+        out.append(run(args.arch, S, args.multi_pod))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/graph_scale_dryrun.jsonl", "a") as f:
+        for r in out:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

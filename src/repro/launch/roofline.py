@@ -1,0 +1,119 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Terms (per device — XLA cost_analysis of an SPMD module is per-device,
+verified empirically in tests/test_dryrun_machinery.py):
+
+  compute   = flops / PEAK_FLOPS
+  memory    = bytes_accessed / HBM_BW
+  collective= sum over collective ops of payload * mult / LINK_BW
+              payload = max(result bytes, operand bytes) — covers
+              all-gather (result-sized) and reduce-scatter (operand-sized);
+              mult = 2 for all-reduce (reduce+broadcast phases), else 1.
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device payload bytes by collective type, parsed from HLO."""
+    out = {c: 0 for c in _COLL}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        for c in _COLL:
+            tok = f" {c}("
+            tok_start = f" {c}-start("
+            if tok in line or tok_start in line:
+                op = tok_start if tok_start in line else tok
+                pos = line.index(op)
+                result_b = _shape_bytes(line[:pos])
+                operand_b = _shape_bytes(line[pos:])
+                out[c] += max(result_b, operand_b)
+                out["count"] += 1
+                break
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll: dict) -> dict:
+    coll_time = 0.0
+    for c in _COLL:
+        mult = 2.0 if c == "all-reduce" else 1.0
+        coll_time += coll.get(c, 0) * mult / LINK_BW
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": coll_time}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    terms["step_lower_bound_s"] = bound
+    # roofline fraction: useful-compute time over the bounding term
+    terms["roofline_frac"] = (t_compute / bound) if bound > 0 else 0.0
+    return terms
+
+
+def active_params(cfg, model) -> int:
+    """Parameters touched per token: total minus the (1 - active/E)
+    fraction of expert weights; token-embedding gather excluded."""
+    from repro.nn.param import _walk  # noqa: internal reuse
+    total = 0
+    expert = 0
+    embed_tbl = 0
+    for path, d in _walk(model.param_defs):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+        if d.axes and "experts" in d.axes:
+            expert += n
+        if path and path[-1] == "tok":
+            embed_tbl += n
+    active = total - embed_tbl
+    if cfg.moe_experts:
+        active -= expert
+        active += expert * cfg.moe_top_k // cfg.moe_experts
+    if cfg.tie_embeddings:
+        active += embed_tbl  # unembed matmul reuses the table
+    return int(active)
+
+
+def model_flops(cfg, model, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*tokens (train) / 2*N_active*tokens
+    (prefill) / 2*N_active*new_tokens (decode). Matmul-only convention."""
+    n = active_params(cfg, model)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

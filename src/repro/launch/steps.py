@@ -1,0 +1,217 @@
+"""Step functions + sharding spec assembly shared by dryrun.py / train.py.
+
+``input_specs(arch, shape)`` builds ShapeDtypeStruct stand-ins for every
+input of a cell (state/caches/batch) — shardable, weak-type-correct, no
+device allocation (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.models import batch_spec, build
+from repro.nn import param as nnp
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.parallel.axes import axis_rules
+from repro.parallel.sharding import recipe_for
+
+
+# ------------------------------------------------------------ defs helpers
+
+def opt_state_defs(param_defs, state_dtype="float32"):
+    dt = jnp.bfloat16 if state_dtype == "bfloat16" else jnp.float32
+
+    def moment_like(path, d: nnp.ParamDef):
+        return nnp.ParamDef(d.shape, dt, "zeros", 0.0, d.axes)
+
+    return {
+        "m": nnp.map_defs(moment_like, param_defs),
+        "v": nnp.map_defs(moment_like, param_defs),
+        "step": nnp.ParamDef((), jnp.int32, "zeros", 0.0, ()),
+    }
+
+
+def pick_state_dtype(model) -> str:
+    """bf16 Adam moments for >=100B-param archs (halves optimizer HBM —
+    standard at that scale); f32 otherwise."""
+    return "bfloat16" if model.n_params() >= 100e9 else "float32"
+
+
+def pick_param_dtype(model) -> str:
+    """bf16 live params for >=100B-param archs: halves the FSDP all-gather
+    volume and the parameter HBM (§Perf iteration A4). Smaller archs keep
+    f32 params (cheap, better numerics)."""
+    return "bfloat16" if model.n_params() >= 100e9 else "float32"
+
+
+def train_state_defs(model, state_dtype=None, param_dtype=None):
+    state_dtype = state_dtype or pick_state_dtype(model)
+    param_dtype = param_dtype or pick_param_dtype(model)
+    pdefs = model.param_defs if param_dtype == "float32" \
+        else _bf16_params(model.param_defs)
+    return {"params": pdefs,
+            "opt": opt_state_defs(model.param_defs, state_dtype),
+            "step": nnp.ParamDef((), jnp.int32, "zeros", 0.0, ())}
+
+
+def state_shardings(defs, recipe, mesh):
+    return nnp.map_defs(
+        lambda path, d: NamedSharding(
+            mesh, nnp.fit_spec(d.shape, tuple(
+                recipe.params.get(a) if a is not None else None
+                for a in (d.axes or (None,) * len(d.shape))), mesh)),
+        defs)
+
+
+def batch_shardings(batch_abstract, recipe, mesh, kind: str):
+    dp = recipe.acts.get("batch")
+    seq = recipe.acts.get("seq_outer")
+
+    def spec_for(name, sds):
+        if name in ("tokens", "labels"):
+            if kind == "decode":
+                return nnp.fit_spec(sds.shape, (dp, None), mesh)
+            return nnp.fit_spec(sds.shape, (dp, seq), mesh)
+        if name in ("patches", "frames"):
+            return nnp.fit_spec(sds.shape, (dp, None, None), mesh)
+        if name in ("feat", "lap_pe"):
+            return nnp.fit_spec(sds.shape, (dp, seq, None), mesh)
+        if name in ("in_deg", "out_deg"):
+            return nnp.fit_spec(sds.shape, (dp, seq), mesh)
+        return P()  # block_idx / buckets etc.: replicated layout metadata
+
+    return {k: NamedSharding(mesh, spec_for(k, v))
+            for k, v in batch_abstract.items()}
+
+
+def cache_shardings(cache_defs, recipe, mesh):
+    def one(path, d: nnp.ParamDef):
+        mapped = tuple(recipe.acts.get(a) if a is not None else None
+                       for a in d.axes)
+        return NamedSharding(mesh, nnp.fit_spec(d.shape, mapped, mesh))
+
+    return nnp.map_defs(one, cache_defs)
+
+
+# ------------------------------------------------------------ step builders
+
+def make_train_step(model, recipe, mesh, *, lr: float = 3e-4,
+                    state_dtype=None):
+    opt = AdamW(lr=warmup_cosine(lr, 100, 10_000),
+                state_dtype=state_dtype or pick_state_dtype(model))
+
+    def train_step(state, batch):
+        with axis_rules(recipe, mesh):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch), has_aux=True)(state["params"])
+            new_p, new_opt = opt.update(grads, state["opt"], state["params"])
+        return ({"params": new_p, "opt": new_opt, "step": state["step"] + 1},
+                {"loss": loss})
+
+    return train_step
+
+
+def make_prefill_step(model, recipe, mesh):
+    def prefill_step(params, batch):
+        with axis_rules(recipe, mesh):
+            return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model, recipe, mesh, *, sparse: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        with axis_rules(recipe, mesh):
+            return model.decode(params, cache, tokens, pos, sparse=sparse)
+
+    return serve_step
+
+
+# ------------------------------------------------------------ cell assembly
+
+def _bf16_params(defs):
+    """Serve-time weights in bf16 (halves HBM + weight all-gather volume;
+    §Perf iteration C3)."""
+    def cast(path, d: nnp.ParamDef):
+        if jnp.issubdtype(d.dtype, jnp.floating):
+            return nnp.ParamDef(d.shape, jnp.bfloat16, d.init, d.scale,
+                                d.axes, d.fan_axis)
+        return d
+
+    return nnp.map_defs(cast, defs)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, ulysses=None,
+               overrides=None):
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    sparse_decode = shape_name == "long_500k" and cfg.family not in (
+        "ssm", "hybrid")
+    recipe = recipe_for(shape, mesh, ulysses=ulysses)
+    model = build(cfg)
+    if shape.kind != "train":
+        model = dataclasses.replace(
+            model, param_defs=_bf16_params(model.param_defs))
+    st_defs = train_state_defs(model)
+
+    if shape.kind == "train":
+        fn = make_train_step(model, recipe, mesh)
+        state_abs = nnp.abstract_tree(st_defs)
+        state_shard = state_shardings(st_defs, recipe, mesh)
+        batch_abs = batch_spec(cfg, shape)
+        batch_shard = batch_shardings(batch_abs, recipe, mesh, shape.kind)
+        args = (state_abs, batch_abs)
+        in_shardings = (state_shard, batch_shard)
+        donate = (0,)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(model, recipe, mesh)
+        p_abs = nnp.abstract_tree(model.param_defs)
+        p_shard = state_shardings(model.param_defs, recipe, mesh)
+        batch_abs = batch_spec(cfg, shape)
+        batch_shard = batch_shardings(batch_abs, recipe, mesh, shape.kind)
+        args = (p_abs, batch_abs)
+        in_shardings = (p_shard, batch_shard)
+        donate = ()
+    else:  # decode
+        fn = make_decode_step(model, recipe, mesh, sparse=sparse_decode)
+        p_abs = nnp.abstract_tree(model.param_defs)
+        p_shard = state_shardings(model.param_defs, recipe, mesh)
+        c_defs = model.cache_defs(shape.global_batch, shape.seq_len)
+        c_abs = nnp.abstract_tree(c_defs)
+        c_shard = cache_shardings(c_defs, recipe, mesh)
+        batch_abs = batch_spec(cfg, shape)
+        batch_shard = batch_shardings(batch_abs, recipe, mesh, shape.kind)
+        tok_abs = batch_abs["tokens"]
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p_abs, c_abs, tok_abs, pos_abs)
+        in_shardings = (p_shard, c_shard, batch_shard["tokens"],
+                        NamedSharding(mesh, P()))
+        donate = (1,)
+    return {"cfg": cfg, "shape": shape, "recipe": recipe, "fn": fn,
+            "args": args, "in_shardings": in_shardings, "donate": donate,
+            "model": model, "note": "attn=cluster_sparse" if sparse_decode
+            else ""}
+
+
+def lower_cell(cell, mesh):
+    jf = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
+                 donate_argnums=cell["donate"])
+    with mesh:
+        lowered = jf.lower(*cell["args"])
+    return lowered
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """Public dry-run helper: the ShapeDtypeStruct stand-ins for a cell."""
+    cell = build_cell(arch, shape_name, mesh)
+    return cell["args"]

@@ -1,0 +1,1 @@
+from repro.models.api import Model, batch_spec, build  # noqa: F401

@@ -1,0 +1,205 @@
+"""Uniform model API across families.
+
+``build(cfg)`` returns a :class:`Model` exposing
+
+* ``param_defs`` / ``init(key)`` / ``abstract_params()``
+* ``loss(params, batch)``          -> (scalar, metrics)      [train]
+* ``prefill(params, batch)``       -> (logits, cache)        [prefill]
+* ``decode(params, cache, tokens, pos)`` -> (logits, cache)  [decode]
+* ``cache_defs(batch, seq_len)``   -> ParamDef tree for decode caches
+* ``batch_spec(shape_cfg)``        -> ShapeDtypeStruct batch stand-ins
+
+The graph-transformer family lives in repro/core (it needs the paper
+machinery) and is registered lazily to avoid import cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.models import ssm as SSM
+from repro.nn import param as nnp
+
+
+# ------------------------------------------------------------ ssm family
+
+def ssm_lm_defs(cfg):
+    layer = {"norm": L.rmsnorm_defs(cfg.d_model),
+             "mamba": SSM.mamba_defs(cfg)}
+    return {
+        "embed": L.embedding_defs(cfg),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+        "layers": nnp.stack(layer, cfg.n_layers),
+    }
+
+
+def ssm_lm_forward(p, cfg, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed_tokens(p["embed"], cfg, batch["tokens"], dtype)
+
+    def body(h, pp):
+        a, _ = SSM.mamba_apply(pp["mamba"], cfg,
+                               L.rmsnorm(pp["norm"], h, cfg.norm_eps))
+        return h + a, None
+
+    h, _ = jax.lax.scan(LM._maybe_remat(body, cfg), h, p["layers"])
+    return L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+
+
+def ssm_lm_loss(p, cfg, batch):
+    h = ssm_lm_forward(p, cfg, batch)
+    loss = L.chunked_softmax_xent(p["embed"], cfg, h, batch["labels"])
+    return loss, {"xent": loss}
+
+
+def ssm_lm_decode(p, cfg, cache, tokens, pos, *, sparse=False):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed_tokens(p["embed"], cfg, tokens, dtype)
+
+    def body(h, xs):
+        pp, cc = xs
+        a, cc = SSM.mamba_decode(pp["mamba"], cfg,
+                                 L.rmsnorm(pp["norm"], h, cfg.norm_eps), cc)
+        return h + a, cc
+
+    h, new_cache = jax.lax.scan(body, h, (p["layers"], cache["layers"]))
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    return L.logits_fn(p["embed"], cfg, h), {"layers": new_cache}
+
+
+def ssm_cache_defs(cfg, batch, seq_len):
+    return {"layers": nnp.stack(SSM.mamba_cache_defs(cfg, batch),
+                                cfg.n_layers)}
+
+
+# ------------------------------------------------------------ model handle
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+    param_defs: Any
+    loss: Callable          # (params, batch) -> (loss, metrics)
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    decode: Callable        # (params, cache, tokens, pos) -> (logits, cache)
+    cache_defs: Callable    # (batch, seq_len) -> defs
+
+    def init(self, key):
+        return nnp.init_tree(self.param_defs, key)
+
+    def abstract_params(self):
+        return nnp.abstract_tree(self.param_defs)
+
+    def n_params(self) -> int:
+        return nnp.num_params(self.param_defs)
+
+
+def _lm_prefill_and_cache(p, cfg, batch):
+    return LM.lm_prefill(p, cfg, batch)
+
+
+def _hybrid_prefill(p, cfg, batch):
+    # forward produces logits; caches at hybrid prefill are the final mamba
+    # states + attention kv — cost dominated by the forward itself.
+    h, _ = HY.hybrid_forward(p, cfg, batch)
+    return L.logits_fn(p["embed"], cfg, h[:, -1:]), {}
+
+
+def _ssm_prefill(p, cfg, batch):
+    h = ssm_lm_forward(p, cfg, batch)
+    return L.logits_fn(p["embed"], cfg, h[:, -1:]), {}
+
+
+def _encdec_prefill(p, cfg, batch):
+    h = ED.encdec_forward(p, cfg, batch)
+    return L.logits_fn(p["embed"], cfg, h[:, -1:]), {}
+
+
+def build(cfg) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            param_defs=LM.lm_defs(cfg),
+            loss=lambda p, b: LM.lm_loss(p, cfg, b),
+            prefill=lambda p, b: _lm_prefill_and_cache(p, cfg, b),
+            decode=lambda p, c, t, pos, sparse=False:
+                LM.lm_decode_step(p, cfg, c, t, pos, sparse=sparse),
+            cache_defs=lambda b, s: LM.lm_cache_defs(cfg, b, s),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            param_defs=HY.hybrid_defs(cfg),
+            loss=lambda p, b: HY.hybrid_loss(p, cfg, b),
+            prefill=lambda p, b: _hybrid_prefill(p, cfg, b),
+            decode=lambda p, c, t, pos, sparse=False:
+                HY.hybrid_decode_step(p, cfg, c, t, pos, sparse=sparse),
+            cache_defs=lambda b, s: HY.hybrid_cache_defs(cfg, b, s),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            param_defs=ssm_lm_defs(cfg),
+            loss=lambda p, b: ssm_lm_loss(p, cfg, b),
+            prefill=lambda p, b: _ssm_prefill(p, cfg, b),
+            decode=lambda p, c, t, pos, sparse=False:
+                ssm_lm_decode(p, cfg, c, t, pos, sparse=sparse),
+            cache_defs=lambda b, s: ssm_cache_defs(cfg, b, s),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            param_defs=ED.encdec_defs(cfg),
+            loss=lambda p, b: ED.encdec_loss(p, cfg, b),
+            prefill=lambda p, b: _encdec_prefill(p, cfg, b),
+            decode=lambda p, c, t, pos, sparse=False:
+                ED.encdec_decode_step(p, cfg, c, t, pos, sparse=sparse),
+            cache_defs=lambda b, s: ED.encdec_cache_defs(cfg, b, s),
+        )
+    if fam == "graph":
+        from repro.core.graph_model import build_graph_model
+        return build_graph_model(cfg)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ------------------------------------------------------------ batch specs
+
+def batch_spec(cfg, shape_cfg):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    D = cfg.d_model
+    if shape_cfg.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            Tp = cfg.frontend_tokens
+            out = {
+                "patches": jax.ShapeDtypeStruct((B, Tp, D), bf16),
+                "tokens": jax.ShapeDtypeStruct((B, S - Tp), i32),
+            }
+            if shape_cfg.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((B, S - Tp), i32)
+            return out
+        if cfg.family == "encdec":
+            out = {
+                "frames": jax.ShapeDtypeStruct((B, cfg.frontend_tokens, D),
+                                               bf16),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if shape_cfg.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            return out
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape_cfg.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return out
+    # decode: one new token, KV cache of length S
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

@@ -1,0 +1,159 @@
+"""Jamba-style hybrid: Mamba+attention interleaved 1:7, MoE every other FFN.
+
+Scan-over-layers with heterogeneous layers: we scan over *periods* of
+``attn_every`` (=8) layers; inside a period the structure is static
+(mixer: mamba except the middle slot which is attention; FFN alternating
+dense/MoE), so period params stack uniformly across periods.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.ssm import (mamba_apply, mamba_cache_defs, mamba_decode,
+                              mamba_defs)
+from repro.nn import param as nnp
+from repro.parallel import axes as pax
+
+
+def _period_pattern(cfg):
+    """Static slot pattern for one period: list of (mixer, ffn) tags."""
+    pe = cfg.attn_every
+    pat = []
+    for j in range(pe):
+        mixer = "attn" if j == pe // 2 else "mamba"
+        ffn = "moe" if (j % cfg.moe_every == 0 and cfg.moe_experts) else "dense"
+        pat.append((mixer, ffn))
+    return pat
+
+
+def _slot_defs(cfg, mixer: str, ffn: str):
+    d = {"mixer_norm": L.rmsnorm_defs(cfg.d_model),
+         "ffn_norm": L.rmsnorm_defs(cfg.d_model)}
+    d["mixer"] = L.attention_defs(cfg) if mixer == "attn" else mamba_defs(cfg)
+    d["ffn"] = moe_defs(cfg) if ffn == "moe" else L.mlp_defs(cfg)
+    return d
+
+
+def hybrid_defs(cfg):
+    pe = cfg.attn_every
+    assert cfg.n_layers % pe == 0, "n_layers must be a multiple of attn_every"
+    n_periods = cfg.n_layers // pe
+    pat = _period_pattern(cfg)
+    period = {f"slot{j}": _slot_defs(cfg, m, f) for j, (m, f) in enumerate(pat)}
+    return {
+        "embed": L.embedding_defs(cfg),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+        "periods": nnp.stack(period, n_periods),
+    }
+
+
+def _slot_fwd(p, cfg, h, pos, mixer: str, ffn: str):
+    a = L.rmsnorm(p["mixer_norm"], h, cfg.norm_eps)
+    if mixer == "attn":
+        a = LM.attn_apply(p["mixer"], cfg, a, pos)
+    else:
+        a, _ = mamba_apply(p["mixer"], cfg, a)
+    h = h + a
+    h = pax.logical(h, "batch", "seq_outer", "embed")
+    m = L.rmsnorm(p["ffn_norm"], h, cfg.norm_eps)
+    if ffn == "moe":
+        y, aux = moe_apply(p["ffn"], cfg, m)
+    else:
+        y, aux = L.mlp(p["ffn"], m), 0.0
+    return h + y, aux
+
+
+def hybrid_forward(p, cfg, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed_tokens(p["embed"], cfg, batch["tokens"], dtype)
+    h = pax.logical(h, "batch", "seq_outer", "embed")
+    pos = jnp.arange(h.shape[1])[None, :]
+    pat = _period_pattern(cfg)
+
+    def period_fwd(h, pp):
+        aux = jnp.zeros((), jnp.float32)
+        for j, (mixer, ffn) in enumerate(pat):
+            h, a = _slot_fwd(pp[f"slot{j}"], cfg, h, pos, mixer, ffn)
+            aux = aux + a
+        return h, aux
+
+    body = LM._maybe_remat(period_fwd, cfg)
+
+    def scan_body(carry, pp):
+        h, aux = carry
+        h, a = body(h, pp)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(
+        scan_body, (h, jnp.zeros((), jnp.float32)), p["periods"])
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    return h, aux / max(cfg.n_layers, 1)
+
+
+def hybrid_loss(p, cfg, batch, *, aux_coef: float = 0.01):
+    h, aux = hybrid_forward(p, cfg, batch)
+    loss = L.chunked_softmax_xent(p["embed"], cfg, h, batch["labels"])
+    return loss + aux_coef * aux, {"xent": loss, "aux": aux}
+
+
+# ------------------------------------------------------------ decode
+
+def hybrid_cache_defs(cfg, batch: int, seq_len: int):
+    pe = cfg.attn_every
+    n_periods = cfg.n_layers // pe
+    pat = _period_pattern(cfg)
+    KV, Dh = cfg.kv_heads, cfg.head_dim
+    period = {}
+    for j, (mixer, _) in enumerate(pat):
+        if mixer == "attn":
+            period[f"slot{j}"] = {
+                "k": nnp.zeros((batch, seq_len, KV, Dh),
+                               ("batch", "kv_seq", "kv_heads", "head_dim"),
+                               dtype=jnp.bfloat16),
+                "v": nnp.zeros((batch, seq_len, KV, Dh),
+                               ("batch", "kv_seq", "kv_heads", "head_dim"),
+                               dtype=jnp.bfloat16),
+            }
+        else:
+            period[f"slot{j}"] = mamba_cache_defs(cfg, batch)
+    return {"periods": nnp.stack(period, n_periods)}
+
+
+def hybrid_decode_step(p, cfg, cache, tokens, pos, *, sparse: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed_tokens(p["embed"], cfg, tokens, dtype)
+    pat = _period_pattern(cfg)
+    window = cfg.window if sparse else 0
+    n_global = cfg.n_global if sparse else 0
+
+    def period_decode(h, xs):
+        pp, cc = xs
+        cc_new = {}
+        for j, (mixer, ffn) in enumerate(pat):
+            sp, sc = pp[f"slot{j}"], cc[f"slot{j}"]
+            a = L.rmsnorm(sp["mixer_norm"], h, cfg.norm_eps)
+            if mixer == "attn":
+                a, sc = LM.attn_decode(sp["mixer"], cfg, a, sc, pos,
+                                       window=window, n_global=n_global)
+            else:
+                a, sc = mamba_decode(sp["mixer"], cfg, a, sc)
+            h = h + a
+            m = L.rmsnorm(sp["ffn_norm"], h, cfg.norm_eps)
+            if ffn == "moe":
+                y, _ = moe_apply(sp["ffn"], cfg, m)
+            else:
+                y = L.mlp(sp["ffn"], m)
+            h = h + y
+            cc_new[f"slot{j}"] = sc
+        return h, cc_new
+
+    h, new_cache = jax.lax.scan(period_decode, h,
+                                (p["periods"], cache["periods"]))
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    logits = L.logits_fn(p["embed"], cfg, h)
+    return logits, {"periods": new_cache}

@@ -1,0 +1,276 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (chunked,
+memory-bounded), SwiGLU MLP, embeddings.
+
+Everything is (defs, apply) pairs over ParamDef trees; activations carry
+logical-axis annotations via ``parallel.axes.logical``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import param as nnp
+from repro.parallel.axes import logical
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------- norms
+
+def rmsnorm_defs(d: int):
+    return {"scale": nnp.ones((d,), ("embed",))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(F32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def headnorm(scale, x, eps=1e-6):
+    """Per-head RMSNorm over head_dim (qwen3 qk_norm). x: (..., H, Dh)."""
+    x32 = x.astype(F32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+def rope(x, pos, theta: float):
+    """Rotary embedding, llama split-half convention.
+
+    x: (B, S, H, Dh); pos: (B, S) or (S,) int32. theta==0 -> no-op (NoPE).
+    """
+    if not theta:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos.astype(F32)[:, :, None] * freq[None, None, :]  # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+def attention_defs(cfg):
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    defs = {
+        "wq": nnp.fan_in((D, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": nnp.fan_in((D, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": nnp.fan_in((D, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": nnp.fan_in((H, Dh, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = nnp.ones((Dh,), ("head_dim",))
+        defs["k_norm"] = nnp.ones((Dh,), ("head_dim",))
+    return defs
+
+
+def project_qkv(p, cfg, x, pos):
+    """x (B,S,D) -> q (B,S,H,Dh), k/v (B,S,KV,Dh), with qk_norm + rope."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = headnorm(p["q_norm"], q, cfg.norm_eps)
+        k = headnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(p, x):
+    """x (B,S,H,Dh) -> (B,S,D)."""
+    return jnp.einsum("bshk,hkd->bsd", x, p["wo"].astype(x.dtype))
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk_q: int = 2048,
+                      chunk_k: int = 1024, bias=None, q_offset=0):
+    """Memory-bounded flash-style attention in pure jnp (the XLA / oracle
+    path; the Pallas kernel in kernels/flash_attention.py is the TPU path).
+
+    q: (B,Sq,H,Dh), k/v: (B,Sk,KV,Dh) with H % KV == 0 (GQA, kv never
+    materialized repeated). bias: optional (B or 1, H, Sq, Sk) additive.
+    q_offset: global position of q[0] (sequence-parallel callers).
+    Returns (B,Sq,H,Dh).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = Dh ** -0.5
+
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    # pad to multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * cq - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * ck - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * ck - Sk), (0, 0), (0, 0)))
+    if bias is not None:
+        bias = jnp.pad(bias, ((0, 0), (0, 0), (0, nq * cq - Sq),
+                              (0, nk * ck - Sk)))
+    # (B, nq, cq, KV, G, Dh)
+    qb = qp.reshape(B, nq, cq, KV, G, Dh)
+    kb = kp.reshape(B, nk, ck, KV, Dh)
+    vb = vp.reshape(B, nk, ck, KV, Dh)
+
+    @jax.checkpoint  # flash-style backward: recompute chunk scores instead
+    def q_block(args):  # of stacking nq*nk f32 score tensors as residuals
+        qi, qblk = args  # qblk: (B, cq, KV, G, Dh)
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def k_step(carry, kin):
+            m, l, acc = carry
+            ki, kblk, vblk = kin  # (B, ck, KV, Dh)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk,
+                           preferred_element_type=F32) * scale
+            kp_ = ki * ck + jnp.arange(ck)
+            valid = (kp_ < Sk)[None, None, None, None, :] \
+                & (qpos < q_offset + Sq)[None, None, None, :, None]
+            if causal:
+                valid = valid & (qpos[:, None] >= kp_[None, :])[None, None, None]
+            if bias is not None:
+                bb = jax.lax.dynamic_slice(
+                    bias, (0, 0, qi * cq, ki * ck),
+                    (bias.shape[0], bias.shape[1], cq, ck))
+                s = s + bb.reshape(bb.shape[0], KV, G, cq, ck).astype(F32)
+            s = jnp.where(valid, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            dead = jnp.isneginf(m_new)
+            p = jnp.where(dead[..., None], 0.0, jnp.exp(s - m_new[..., None]))
+            corr = jnp.where(dead, 0.0, jnp.exp(m - m_new))
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=F32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), -jnp.inf, F32)
+        l0 = jnp.zeros((B, KV, G, cq), F32)
+        a0 = jnp.zeros((B, KV, G, cq, Dh), F32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, KV, G, cq, Dh)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    # (nq, B, KV, G, cq, Dh) -> (B, nq*cq, KV*G, Dh)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    out = out.reshape(B, nq * cq, H, Dh)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     n_global: int = 0):
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B,1,H,Dh); caches: (B,S,KV,Dh); cache_len: () or (B,) current length.
+    window/n_global > 0 -> TorchGT cluster-sparse decode mask (local window
+    + global sink tokens) instead of full-cache attention.
+    """
+    B, _, H, Dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=F32) * (Dh ** -0.5)
+    pos = jnp.arange(S)[None, None, None, :]
+    ln = jnp.asarray(cache_len).reshape(-1, 1, 1, 1)
+    valid = pos < ln
+    if window:
+        in_window = pos >= (ln - window)
+        is_global = pos < n_global
+        valid = valid & (in_window | is_global)
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(F32), axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def mlp_defs(cfg, d_ff=None):
+    D, FF = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": nnp.fan_in((D, FF), ("embed", "mlp")),
+        "w_up": nnp.fan_in((D, FF), ("embed", "mlp")),
+        "w_down": nnp.fan_in((FF, D), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(F32)).astype(dt) * u
+    h = logical(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------- embedding
+
+def embedding_defs(cfg):
+    defs = {"tok": nnp.embed((cfg.vocab_padded, cfg.d_model),
+                             ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = nnp.fan_in((cfg.d_model, cfg.vocab_padded),
+                                     ("embed", "vocab"))
+    return defs
+
+
+def embed_tokens(p, cfg, tokens, dtype):
+    e = p["tok"]
+    out = jnp.take(e, tokens, axis=0).astype(dtype)
+    return out * (cfg.d_model ** 0.5 if cfg.family == "encdec" else 1.0)
+
+
+def logits_fn(p, cfg, h):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+
+def chunked_softmax_xent(p, cfg, h, labels, chunk: int = 512):
+    """Cross-entropy without materializing full (B,S,V) logits: scan over
+    sequence chunks. labels==-1 positions are masked out. Returns mean loss."""
+    B, S, D = h.shape
+    c = min(chunk, S)
+    n = -(-S // c)
+    hp = jnp.pad(h, ((0, 0), (0, n * c - S), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, n * c - S)), constant_values=-1)
+    hb = jnp.moveaxis(hp.reshape(B, n, c, D), 1, 0)
+    lb = jnp.moveaxis(lp.reshape(B, n, c), 1, 0)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never stack them
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs
+        logits = logits_fn(p, cfg, hc).astype(F32)
+        logits = logical(logits, "batch", "seq", "vocab")
+        if cfg.vocab_padded != cfg.vocab_size:  # mask vocab padding
+            pad = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+                   >= cfg.vocab_size)
+            logits = jnp.where(pad, -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # label log-prob via masked sum — NO gather over the (model-axis
+        # sharded) vocab dim, so GSPMD keeps logits sharded end to end
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+                  == jnp.maximum(lc, 0)[..., None])
+        ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        mask = (lc >= 0).astype(F32)
+        tot = tot + ((logz - ll) * mask).sum()
+        cnt = cnt + mask.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), F32), jnp.zeros((), F32)),
+                                 (hb, lb))
+    return tot / jnp.maximum(cnt, 1.0)

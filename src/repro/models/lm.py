@@ -1,0 +1,310 @@
+"""Decoder-only LM covering families: dense (llama/qwen3), moe (qwen3-moe,
+kimi-k2), vlm (internvl2 backbone + stub frontend).
+
+Layers are scanned (stacked params) with configurable remat; activations
+carry logical-axis constraints; attention dispatches between plain chunked
+attention (heads TP via GSPMD), explicit Ulysses a2a (prefill), and the
+TorchGT cluster-sparse backend (long-context).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import moe_apply, moe_defs
+from repro.nn import param as nnp
+from repro.parallel import axes as pax
+from repro.parallel.ulysses import (can_ulysses, seqpar_attention,
+                                    ulysses_attention)
+
+
+# ------------------------------------------------------------ layer defs
+
+def _layer_defs(cfg, moe: bool):
+    d = {
+        "attn_norm": L.rmsnorm_defs(cfg.d_model),
+        "attn": L.attention_defs(cfg),
+        "mlp_norm": L.rmsnorm_defs(cfg.d_model),
+    }
+    if moe:
+        d["moe"] = moe_defs(cfg)
+    else:
+        d["mlp"] = L.mlp_defs(
+            cfg, cfg.dense_d_ff if cfg.dense_d_ff else cfg.d_ff)
+    return d
+
+
+def lm_defs(cfg):
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    is_moe = bool(cfg.moe_experts)
+    defs = {
+        "embed": L.embedding_defs(cfg),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+        "layers": nnp.stack(_layer_defs(cfg, is_moe), n_scan),
+    }
+    for i in range(cfg.n_dense_layers):
+        defs[f"dense_layer_{i}"] = _layer_defs(cfg, False)
+    if cfg.family == "vlm":
+        defs["frontend_proj"] = {
+            "w": nnp.fan_in((cfg.d_model, cfg.d_model), (None, "embed")),
+        }
+    return defs
+
+
+# ------------------------------------------------------------ attention
+
+def _lm_sparse_attn_fn(cfg):
+    """TorchGT cluster-sparse backend in its local+global LM form: a static
+    (shape-only) layout — sliding window of k-blocks + leading global
+    blocks — runs the same blocked attention as graphs (DESIGN.md §4)."""
+    import numpy as np
+
+    from repro.core.dual_attention import cluster_sparse_attention
+    from repro.core.reformation import lm_local_global_layout
+
+    def attn(q, k, v):
+        S = q.shape[1]
+        lay = lm_local_global_layout(S, bq=128, bk=128, window=cfg.window,
+                                     n_global=cfg.n_global,
+                                     causal=cfg.causal)
+        bi = jnp.broadcast_to(jnp.asarray(lay.block_idx)[None],
+                              (q.shape[0],) + lay.block_idx.shape)
+        return cluster_sparse_attention(q, k, v, bi, None, None,
+                                        bq=lay.bq, bk=lay.bk,
+                                        causal=cfg.causal)
+
+    return attn
+
+
+def attn_apply(p, cfg, h, pos, return_kv: bool = False):
+    """Full-sequence attention (train/prefill). h (B,S,D).
+
+    Distribution dispatch (§Perf-tuned; EXPERIMENTS.md):
+      1. Ulysses a2a when heads divide the model axis and the recipe asks
+         for sequence parallelism (the paper's graph parallelism);
+      2. explicit sequence-parallel gather attention when heads CANNOT
+         split (e.g. 9 heads on 16 devices) but the sequence is sharded —
+         GSPMD's fallback replicates the whole attention otherwise;
+      3. plain chunked attention with heads TP; kv heads are pre-repeated
+         to the full head count when kv_heads < axis size, so every einsum
+         shards head-wise without involuntary resharding.
+    """
+    q, k, v = L.project_qkv(p, cfg, h, pos)
+    kv_out = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)) \
+        if return_kv else None
+    ctx = pax.current()
+    mode = "plain"
+    if ctx is not None:
+        recipe, mesh = ctx
+        pm = mesh.shape.get("model", 1)
+        seq_sharded = recipe.acts.get("seq") == "model"
+        if pm > 1 and recipe.ulysses:
+            if can_ulysses(cfg.n_heads, cfg.kv_heads, h.shape[1] * pm, pm):
+                mode = "ulysses"
+            elif seq_sharded and (h.shape[1] * pm) % pm == 0:
+                mode = "seqpar"
+
+    cq, ck = cfg.attn_chunk_q, cfg.attn_chunk_k
+    if cfg.attn_backend == "cluster_sparse" and h.shape[1] >= 2 * 128:
+        sparse = _lm_sparse_attn_fn(cfg)
+        attn = lambda a, b, c, off=0: sparse(a, b, c)
+    else:
+        attn = functools.partial(L.chunked_attention, causal=cfg.causal,
+                                 chunk_q=cq, chunk_k=ck)
+    if mode == "ulysses":
+        dp = recipe.acts.get("batch") or ()
+        o = ulysses_attention(
+            q, k, v, mesh=mesh, attn_fn=lambda a, b, c: attn(a, b, c),
+            dp_axes=dp if isinstance(dp, tuple) else (dp,))
+    elif mode == "seqpar":
+        dp = recipe.acts.get("batch") or ()
+        o = seqpar_attention(
+            q, k, v, mesh=mesh,
+            attn_fn=lambda a, b, c, off: attn(a, b, c, q_offset=off),
+            dp_axes=dp if isinstance(dp, tuple) else (dp,))
+    else:
+        if ctx is not None:
+            pm = mesh.shape.get("model", 1)
+            G = cfg.n_heads // cfg.kv_heads
+            if pm > 1 and cfg.kv_heads < pm <= cfg.n_heads and G > 1 \
+                    and cfg.n_heads % pm == 0:
+                # repeat kv to full heads: every attention einsum is then
+                # purely head-batched and shards on the model axis
+                k = jnp.repeat(k, G, axis=2)
+                v = jnp.repeat(v, G, axis=2)
+        q = pax.logical(q, "batch", "seq", "heads", "head_dim")
+        k = pax.logical(k, "batch", "seq",
+                        "heads" if k.shape[2] == cfg.n_heads else "kv_heads",
+                        "head_dim")
+        v = pax.logical(v, "batch", "seq",
+                        "heads" if v.shape[2] == cfg.n_heads else "kv_heads",
+                        "head_dim")
+        o = attn(q, k, v)
+    out = L.out_proj(p, o)
+    if return_kv:
+        return out, kv_out
+    return out
+
+
+def attn_decode(p, cfg, h, cache, pos, *, window=0, n_global=0):
+    """h (B,1,D), cache {"k","v"}: (B,S,KV,Dh), pos scalar/int (B,)."""
+    q, k_new, v_new = L.project_qkv(p, cfg, h, jnp.reshape(pos, (-1, 1)))
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    o = L.decode_attention(q, k, v, pos + 1, window=window,
+                           n_global=n_global)
+    return L.out_proj(p, o), {"k": k, "v": v}
+
+
+# ------------------------------------------------------------ layer bodies
+
+def _layer_fwd(p, cfg, h, pos, moe: bool, return_kv: bool = False):
+    a = L.rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+    a = attn_apply(p["attn"], cfg, a, pos, return_kv=return_kv)
+    a, kv = a if return_kv else (a, None)
+    h = h + a
+    h = pax.logical(h, "batch", "seq_outer", "embed")
+    m = L.rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+    if moe:
+        y, aux = moe_apply(p["moe"], cfg, m)
+    else:
+        y, aux = L.mlp(p["mlp"], m), 0.0
+    h = h + y
+    h = pax.logical(h, "batch", "seq_outer", "embed")
+    return h, aux, kv
+
+
+def _layer_decode(p, cfg, h, cache, pos, moe: bool, window=0, n_global=0):
+    a = L.rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+    a, cache = attn_decode(p["attn"], cfg, a, cache, pos,
+                           window=window, n_global=n_global)
+    h = h + a
+    m = L.rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+    if moe:
+        y, _ = moe_apply(p["moe"], cfg, m)
+    else:
+        y = L.mlp(p["mlp"], m)
+    return h + y, cache
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ------------------------------------------------------------ forward
+
+def _embed_inputs(p, cfg, batch, dtype):
+    h = L.embed_tokens(p["embed"], cfg, batch["tokens"], dtype)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dtype)
+        proj = jnp.einsum("btd,de->bte", patches,
+                          p["frontend_proj"]["w"].astype(dtype))
+        h = jnp.concatenate([proj, h], axis=1)
+    return h
+
+
+def lm_forward(p, cfg, batch, return_kv: bool = False):
+    """-> (final hidden states (B,S,D) after final norm, aux loss, caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = _embed_inputs(p, cfg, batch, dtype)
+    h = pax.logical(h, "batch", "seq_outer", "embed")
+    B, S = h.shape[:2]
+    pos = jnp.arange(S)[None, :]
+    is_moe = bool(cfg.moe_experts)
+
+    caches = {}
+    for i in range(cfg.n_dense_layers):
+        h, _, kv = _layer_fwd(p[f"dense_layer_{i}"], cfg, h, pos, moe=False,
+                              return_kv=return_kv)
+        if return_kv:
+            caches[f"dense_layer_{i}"] = {"k": kv[0], "v": kv[1]}
+
+    body = _maybe_remat(
+        lambda hh, pp: _layer_fwd(pp, cfg, hh, pos, moe=is_moe,
+                                  return_kv=return_kv), cfg)
+
+    def scan_body(carry, pp):
+        hh, aux = carry
+        hh, a, kv = body(hh, pp)
+        return (hh, aux + a), kv
+
+    (h, aux), kvs = jax.lax.scan(scan_body, (h, jnp.zeros((), jnp.float32)),
+                                 p["layers"])
+    if return_kv:
+        caches["layers"] = {"k": kvs[0], "v": kvs[1]}
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    return h, aux / max(cfg.n_layers, 1), caches
+
+
+def lm_loss(p, cfg, batch, *, aux_coef: float = 0.01):
+    h, aux, _ = lm_forward(p, cfg, batch)
+    if cfg.family == "vlm":  # loss only over the text positions
+        h = h[:, batch["patches"].shape[1]:]
+    loss = L.chunked_softmax_xent(p["embed"], cfg, h, batch["labels"])
+    return loss + aux_coef * aux, {"xent": loss, "aux": aux}
+
+
+# ------------------------------------------------------------ decode
+
+def lm_cache_defs(cfg, batch: int, seq_len: int):
+    KV, Dh = cfg.kv_heads, cfg.head_dim
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    one = {
+        "k": nnp.zeros((batch, seq_len, KV, Dh),
+                       ("batch", "kv_seq", "kv_heads", "head_dim"),
+                       dtype=jnp.bfloat16),
+        "v": nnp.zeros((batch, seq_len, KV, Dh),
+                       ("batch", "kv_seq", "kv_heads", "head_dim"),
+                       dtype=jnp.bfloat16),
+    }
+    defs = {"layers": nnp.stack(one, n_scan)}
+    for i in range(cfg.n_dense_layers):
+        defs[f"dense_layer_{i}"] = dict(one)
+    return defs
+
+
+def lm_decode_step(p, cfg, cache, tokens, pos, *, sparse: bool = False):
+    """One decode step. tokens (B,1); pos scalar int32 (current length).
+    Returns (logits (B,1,V), new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed_tokens(p["embed"], cfg, tokens, dtype)
+    is_moe = bool(cfg.moe_experts)
+    window = cfg.window if sparse else 0
+    n_global = cfg.n_global if sparse else 0
+
+    new_cache = {}
+    for i in range(cfg.n_dense_layers):
+        key = f"dense_layer_{i}"
+        h, new_cache[key] = _layer_decode(
+            p[key], cfg, h, cache[key], pos, moe=False,
+            window=window, n_global=n_global)
+
+    def scan_body(h, xs):
+        pp, cc = xs
+        h, cc = _layer_decode(pp, cfg, h, cc, pos, moe=is_moe,
+                              window=window, n_global=n_global)
+        return h, cc
+
+    h, scanned = jax.lax.scan(scan_body, h, (p["layers"], cache["layers"]))
+    new_cache["layers"] = scanned
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    logits = L.logits_fn(p["embed"], cfg, h)
+    return logits, new_cache
+
+
+def lm_prefill(p, cfg, batch):
+    """Prefill: forward pass returning last-token logits + KV caches."""
+    h, _, caches = lm_forward(p, cfg, batch, return_kv=True)
+    logits = L.logits_fn(p["embed"], cfg, h[:, -1:])
+    return logits, caches

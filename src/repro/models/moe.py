@@ -1,0 +1,188 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two execution paths with identical math:
+
+* ``moe_tokens``  — single-device dropless sort+ragged_dot path (oracle,
+  used in tests / smoke / whenever no mesh context is active).
+* ``moe_ep``      — shard_map expert-parallel path: experts sharded over the
+  "model" mesh axis; every device routes all tokens of its data-shard,
+  computes only pairs owned by its local experts (capacity-bounded), and the
+  partial outputs are psum-combined over the model axis. This is the
+  GShard/DeepSeek EP pattern expressed with jax collectives.
+
+Routing: softmax-then-top-k with renormalized top-k probs (qwen3 style),
+plus the standard switch-style load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import param as nnp
+from repro.parallel import axes as pax
+
+F32 = jnp.float32
+
+
+def moe_defs(cfg):
+    E, D, F = cfg.moe_experts, cfg.d_model, cfg.moe_d_ff
+    defs = {
+        "router": nnp.fan_in((D, E), ("embed", None), dtype=jnp.float32),
+        "w_gate": nnp.fan_in((E, D, F), ("experts", "embed", "expert_mlp")),
+        "w_up": nnp.fan_in((E, D, F), ("experts", "embed", "expert_mlp")),
+        "w_down": nnp.fan_in((E, F, D), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.moe_shared_experts:
+        from repro.models.layers import mlp_defs
+        defs["shared"] = mlp_defs(cfg, cfg.moe_d_ff * cfg.moe_shared_experts)
+    return defs
+
+
+def _route(router_w, xt, k):
+    """xt (T,D) -> (probs (T,k), idx (T,k), aux_loss scalar)."""
+    logits = (xt.astype(F32) @ router_w.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)          # (T, E)
+    topv, topi = jax.lax.top_k(probs, k)             # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux: E * sum_e f_e * p_e
+    E = probs.shape[-1]
+    pe = probs.mean(0)
+    fe = jnp.zeros((E,), F32).at[topi.reshape(-1)].add(1.0)
+    fe = fe / jnp.maximum(fe.sum(), 1.0)
+    aux = E * jnp.sum(pe * fe)
+    return topv, topi, aux
+
+
+def _expert_ffn(xg, gs, w_gate, w_up, w_down):
+    dt = xg.dtype
+    g = jax.lax.ragged_dot(xg, w_gate.astype(dt), gs)
+    u = jax.lax.ragged_dot(xg, w_up.astype(dt), gs)
+    h = jax.nn.silu(g.astype(F32)).astype(dt) * u
+    return jax.lax.ragged_dot(h, w_down.astype(dt), gs)
+
+
+def moe_tokens(p, cfg, xt):
+    """Dropless single-device MoE over flat tokens xt (T, D)."""
+    T, D = xt.shape
+    k, E = cfg.moe_top_k, cfg.moe_experts
+    topv, topi, aux = _route(p["router"], xt, k)
+    fe = topi.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(fe, stable=True)
+    tok = order // k
+    xg = jnp.take(xt, tok, axis=0)                     # (T*k, D)
+    gs = jnp.bincount(fe, length=E).astype(jnp.int32)
+    yo = _expert_ffn(xg, gs, p["w_gate"], p["w_up"], p["w_down"])
+    w = topv.reshape(-1)[order].astype(yo.dtype)
+    y = jnp.zeros((T, D), yo.dtype).at[tok].add(yo * w[:, None])
+    return y, aux
+
+
+def _ep_local(p_local, cfg, x, *, e_loc: int, ep: int, cf: float, axis: str,
+              combine: str = "psum"):
+    """Runs per-device inside shard_map. x: (B_loc, S, D) replicated over
+    the `axis` (model) mesh dimension; p_local experts are the local slice.
+
+    GShard-style per-expert capacity dispatch: each local expert gets a
+    fixed (C_e, D) buffer; expert compute is one batched einsum
+    (E_loc, C_e, D) x (E_loc, D, F) — FLOPs exactly E_loc*C_e*(matmuls),
+    MXU-friendly, no data-dependent shapes. Over-capacity pairs drop
+    (standard; the aux loss balances the router)."""
+    B, S, D = x.shape
+    k = cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    c_e = int(max(1, -(-T * k * cf // max(cfg.moe_experts, 1))))
+    topv, topi, aux = _route(p_local["router"], xt, k)
+    me = jax.lax.axis_index(axis)
+    owner = topi // e_loc
+    mine = owner == me
+    local_e = jnp.where(mine, topi - me * e_loc, e_loc)   # e_loc = overflow
+    fe = local_e.reshape(-1)                              # (T*k,)
+    # slot-indexed dispatch (§Perf A5): build a (E_loc, C_e) table of which
+    # token fills each expert slot, then gather/scatter ONLY (E_loc,C_e,D)
+    # buffers — never a (T*k, D) pair tensor (which is 8+ GB at this scale)
+    order = jnp.argsort(fe, stable=True)                  # pairs by expert
+    gs = jnp.bincount(fe, length=e_loc + 1)[:e_loc]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), gs.dtype), jnp.cumsum(gs)[:-1]])
+    slot = starts[:, None] + jnp.arange(c_e)[None, :]     # (E_loc, C_e)
+    valid = jnp.arange(c_e)[None, :] < gs[:, None]
+    pair = jnp.take(order, jnp.clip(slot, 0, fe.shape[0] - 1), axis=0)
+    slot_tok = jnp.where(valid, pair // k, 0)             # (E_loc, C_e)
+    buf = jnp.take(xt, slot_tok.reshape(-1), axis=0).reshape(e_loc, c_e, D)
+    buf = buf * valid[..., None].astype(xt.dtype)
+    # expert FFN: batched einsums over local experts
+    dt = xt.dtype
+    g = jnp.einsum("ecd,edf->ecf", buf, p_local["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p_local["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(F32)).astype(dt) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p_local["w_down"].astype(dt))
+    # combine: per-slot weights, scatter-add slots back to their tokens
+    w_flat = jnp.where(mine, topv, 0.0).reshape(-1)
+    w_slot = jnp.where(valid, jnp.take(w_flat, pair), 0.0).astype(out.dtype)
+    y = jnp.zeros((T, D), out.dtype).at[slot_tok.reshape(-1)].add(
+        (out * w_slot[..., None]).reshape(-1, D))
+    y = y.reshape(B, S, D)
+    if combine == "psum_scatter":
+        return jax.lax.psum_scatter(y, axis, scatter_dimension=1,
+                                    tiled=True), aux
+    return jax.lax.psum(y, axis), aux
+
+
+def moe_apply(p, cfg, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (y, aux). Chooses EP path when a mesh context with a
+    'model' axis is active and experts divide across it."""
+    ctx = pax.current()
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    use_ep = False
+    if ctx is not None:
+        recipe, mesh = ctx
+        ep = mesh.shape.get("model", 1)
+        use_ep = ep > 1 and E % ep == 0
+    if not use_ep:
+        B, S, D = x.shape
+        y, aux = moe_tokens(p, cfg, x.reshape(-1, D))
+        y = y.reshape(B, S, D)
+    else:
+        e_loc = E // ep
+        dp = recipe.acts.get("batch")
+        # scatter mode (§Perf A3): tokens enter/leave sequence-sharded on
+        # the model axis; we all-gather activations (bf16) explicitly going
+        # in and psum_scatter coming out — 1/ep the output volume of the
+        # replicate+psum baseline, and no f32 GSPMD gathers.
+        scatter = (recipe.acts.get("seq_outer") == "model"
+                   and x.shape[1] % ep == 0)
+        in_x = P(dp, "model" if scatter else None, None)
+        espec = P("model", None, None)
+        pspec = {
+            "router": P(None, None),
+            "w_gate": espec, "w_up": espec, "w_down": espec,
+        }
+        p_ep = {k2: p[k2] for k2 in pspec}
+        all_axes = tuple(mesh.shape.keys())
+        fn = functools.partial(_ep_local, cfg=cfg, e_loc=e_loc, ep=ep,
+                               cf=capacity_factor, axis="model")
+
+        def wrapped(pp, xx):
+            if scatter:
+                xx = jax.lax.all_gather(xx, "model", axis=1, tiled=True)
+            y, aux = fn(pp, x=xx, combine="psum_scatter" if scatter
+                        else "psum")
+            aux = jax.lax.pmean(aux, all_axes)
+            return y, aux
+
+        y, aux = jax.shard_map(
+            wrapped,
+            mesh=mesh,
+            in_specs=(pspec, in_x),
+            out_specs=(in_x, P()),
+            check_vma=False,
+        )(p_ep, x)
+    if cfg.moe_shared_experts:
+        from repro.models.layers import mlp
+        y = y + mlp(p["shared"], x)
+    return y, aux

@@ -1,0 +1,209 @@
+"""Mamba2 block — SSD (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within a chunk the recurrence is computed in its
+quadratic "attention-like" dual form (MXU-friendly); across chunks a small
+scan propagates the (H, dh, N) state. Decode is the pure recurrence.
+
+Per-head layout: x (B,S,H,dh), dt (B,S,H), A (H,), B/C shared across heads
+(single group): (B,S,N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import param as nnp
+from repro.parallel.axes import logical
+
+F32 = jnp.float32
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_defs(cfg):
+    D = cfg.d_model
+    d_inner, H, dh, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N  # conv over x, B, C (mamba2 layout)
+    return {
+        "in_proj": nnp.fan_in((D, 2 * d_inner + 2 * N + H),
+                              ("embed", "inner")),
+        "conv_w": nnp.normal((cfg.conv_width, conv_dim), ("conv", "inner"),
+                             scale=0.1),
+        "conv_b": nnp.zeros((conv_dim,), ("inner",)),
+        "a_log": nnp.zeros((H,), ("heads",)),       # A = -exp(a_log)
+        "dt_bias": nnp.zeros((H,), ("heads",)),
+        "d_skip": nnp.ones((H,), ("heads",)),
+        "norm": nnp.ones((d_inner,), ("inner",)),
+        "out_proj": nnp.fan_in((d_inner, D), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,S,H,dh) values; dt: (B,S,H) >0; a: (H,) <0; b,c: (B,S,N).
+    Returns y (B,S,H,dh), final_state (B,H,dh,N).
+    """
+    B, S, H, dh = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} % chunk {Q}"
+    nc = S // Q
+
+    # decay exponents per position
+    da = dt * a[None, None, :]                     # (B,S,H)  negative
+    xr = x.reshape(B, nc, Q, H, dh)
+    dar = da.reshape(B, nc, Q, H)
+    dtr = dt.reshape(B, nc, Q, H)
+    br = b.reshape(B, nc, Q, N)
+    cr = c.reshape(B, nc, Q, N)
+
+    cum = jnp.cumsum(dar, axis=2)                  # (B,nc,Q,H) within-chunk
+    total = cum[:, :, -1]                          # (B,nc,H)
+
+    # --- intra-chunk (quadratic dual form) ---
+    # L[q,t] = exp(cum_q - cum_t) for q >= t else 0. Valid entries have
+    # seg <= 0, so clamping at 0 is exact — and keeps masked entries from
+    # overflowing to inf (whose 0*inf backward would be NaN).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None],
+                  jnp.exp(jnp.minimum(seg, 0.0)), 0.0)
+    cb = jnp.einsum("bnqs,bnts->bnqt", cr, br, preferred_element_type=F32)
+    w = cb[..., None] * L                          # (B,nc,Q,Q,H)
+    xdt = xr * dtr[..., None]                      # dt-weighted values
+    y_intra = jnp.einsum("bnqth,bnthp->bnqhp", w,
+                         xdt.astype(F32), preferred_element_type=F32)
+
+    # --- chunk states ---
+    # state_n = sum_t exp(total - cum_t) * dt_t * b_t x_t  : (B,nc,H,dh,N)
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)    # (B,nc,Q,H)
+    sb = jnp.einsum("bnth,bnthp,bnts->bnhps",
+                    (decay_to_end * dtr).astype(F32), xr.astype(F32),
+                    br.astype(F32), preferred_element_type=F32)
+
+    # --- inter-chunk scan ---
+    def step(state, xs):
+        tot, s_new = xs                            # (B,H), (B,H,dh,N)
+        out_state = state                          # state BEFORE this chunk
+        state = state * jnp.exp(tot)[:, :, None, None] + s_new
+        return state, out_state
+
+    s0 = jnp.zeros((B, H, dh, N), F32)
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(sb, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,dh,N)
+
+    # --- inter-chunk contribution: y += exp(cum) * C @ state_prev ---
+    y_inter = jnp.einsum("bnqs,bnhps,bnqh->bnqhp",
+                         cr.astype(F32), prev_states, jnp.exp(cum),
+                         preferred_element_type=F32)
+    y = (y_intra + y_inter).reshape(B, S, H, dh)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, a, b, c):
+    """One-token recurrence. state (B,H,dh,N); x (B,H,dh); dt (B,H);
+    b,c (B,N). Returns (y (B,H,dh), new_state)."""
+    da = jnp.exp(dt * a[None, :])[:, :, None, None]           # (B,H,1,1)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", x.astype(F32), b.astype(F32),
+                     dt.astype(F32))
+    state = state * da + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(F32))
+    return y.astype(x.dtype), state
+
+
+def _split_proj(p, cfg, zxbcdt):
+    d_inner, H, dh, N = ssm_dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def mamba_apply(p, cfg, h, state=None):
+    """Full-sequence Mamba2 block. h (B,S,D) -> (B,S,D).
+
+    If ``state`` is None this is training/prefill (chunked scan); final
+    state is returned for cache initialization."""
+    B, S, D = h.shape
+    d_inner, H, dh, N = ssm_dims(cfg)
+    dt_ = h.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(dt_))
+    z, xi, b, c, dtp = _split_proj(p, cfg, zxbcdt)
+    xbc = jnp.concatenate([xi, b, c], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(dt_),
+                                   p["conv_b"].astype(dt_)).astype(F32)
+                      ).astype(dt_)
+    xi, b, c = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xi = logical(xi, "batch", "seq", "inner")
+    dt = jax.nn.softplus(dtp.astype(F32) + p["dt_bias"].astype(F32))  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(F32))
+    xh = xi.reshape(B, S, H, dh)
+    y, final = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk)
+    y = y + xh * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(F32)).astype(dt_)
+    y32 = y.astype(F32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 ** 2, -1, keepdims=True)
+                             + cfg.norm_eps) * p["norm"].astype(F32)
+         ).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return out, final
+
+
+def mamba_decode(p, cfg, h, cache):
+    """One-token decode. h (B,1,D); cache = {"conv": (B,K-1,conv_dim),
+    "ssm": (B,H,dh,N)}. Returns (out (B,1,D), new_cache)."""
+    B, _, D = h.shape
+    d_inner, H, dh, N = ssm_dims(cfg)
+    dt_ = h.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(dt_))
+    z, xi, b, c, dtp = _split_proj(p, cfg, zxbcdt)
+    xbc = jnp.concatenate([xi, b, c], axis=-1)[:, 0]          # (B,conv_dim)
+    conv_hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    w = p["conv_w"].astype(dt_)                                # (K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_hist, w) \
+        + p["conv_b"].astype(dt_)[None]
+    xbc = jax.nn.silu(conv_out.astype(F32)).astype(dt_)
+    xi, b, c = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dtp.astype(F32)[:, 0] + p["dt_bias"].astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))
+    xh = xi.reshape(B, H, dh)
+    y, new_state = ssd_decode_step(cache["ssm"], xh, dt, a, b, c)
+    y = y + xh * p["d_skip"].astype(dt_)[None, :, None]
+    y = y.reshape(B, d_inner)
+    y = y * jax.nn.silu(z.astype(F32)[:, 0]).astype(dt_)
+    y32 = y.astype(F32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 ** 2, -1, keepdims=True)
+                             + cfg.norm_eps) * p["norm"].astype(F32)
+         ).astype(dt_)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(dt_))[:, None]
+    new_cache = {"conv": conv_hist[:, 1:], "ssm": new_state}
+    return out, new_cache
+
+
+def mamba_cache_defs(cfg, batch: int):
+    d_inner, H, dh, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": nnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                          (None, None, "inner"), dtype=jnp.bfloat16),
+        "ssm": nnp.zeros((batch, H, dh, N), (None, "heads", None, None),
+                         dtype=jnp.float32),
+    }

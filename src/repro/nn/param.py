@@ -1,0 +1,184 @@
+"""Parameter-definition trees.
+
+Models declare parameters as nested dicts of :class:`ParamDef` (shape, dtype,
+initializer, *logical axes*). A single definition tree drives:
+
+* ``init_tree``       -> concrete jnp arrays (deterministic, path-keyed RNG)
+* ``abstract_tree``   -> ShapeDtypeStructs (dry-run, no allocation)
+* ``spec_tree``       -> PartitionSpec tree via logical-axis rules
+* ``stack``           -> prepend a layer axis for scan-over-layers
+
+Keeping init and sharding derived from one tree means they can never drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Tree = Any  # nested dict[str, ParamDef | Tree]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | fan_in | embed
+    scale: float = 0.02
+    axes: tuple[str | None, ...] = ()
+    fan_axis: int = 0  # which dim is fan-in for "fan_in" (stack() shifts it)
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+
+def normal(shape, axes, scale=0.02, dtype=jnp.float32) -> ParamDef:
+    return ParamDef(tuple(shape), dtype, "normal", scale, tuple(axes))
+
+
+def fan_in(shape, axes, dtype=jnp.float32) -> ParamDef:
+    """LeCun-style 1/sqrt(fan_in) init; fan_in = first axis."""
+    return ParamDef(tuple(shape), dtype, "fan_in", 1.0, tuple(axes))
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> ParamDef:
+    return ParamDef(tuple(shape), dtype, "zeros", 0.0, tuple(axes))
+
+
+def ones(shape, axes, dtype=jnp.float32) -> ParamDef:
+    return ParamDef(tuple(shape), dtype, "ones", 0.0, tuple(axes))
+
+
+def embed(shape, axes, scale=0.02, dtype=jnp.float32) -> ParamDef:
+    return ParamDef(tuple(shape), dtype, "embed", scale, tuple(axes))
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _walk(tree: Tree, path=()):  # yields (path, ParamDef)
+    if _is_def(tree):
+        yield path, tree
+        return
+    for k in sorted(tree):
+        yield from _walk(tree[k], path + (k,))
+
+
+def map_defs(fn: Callable[[tuple, ParamDef], Any], tree: Tree) -> Tree:
+    if _is_def(tree):
+        return fn((), tree)
+
+    def rec(t, path):
+        if _is_def(t):
+            return fn(path, t)
+        return {k: rec(v, path + (k,)) for k, v in t.items()}
+
+    return rec(tree, ())
+
+
+def _path_key(key: jax.Array, path: tuple) -> jax.Array:
+    h = int.from_bytes(
+        hashlib.blake2b("/".join(path).encode(), digest_size=4).digest(),
+        "little",
+    )
+    return jax.random.fold_in(key, h)
+
+
+def _init_one(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init in ("normal", "embed"):
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(d.dtype)
+    if d.init == "fan_in":
+        fan = max(1, d.shape[d.fan_axis])
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * (fan ** -0.5)).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_tree(defs: Tree, key: jax.Array) -> Tree:
+    """Materialize parameters. Deterministic per-path; order independent."""
+    return map_defs(lambda p, d: _init_one(d, _path_key(key, p)), defs)
+
+
+def abstract_tree(defs: Tree) -> Tree:
+    return map_defs(lambda p, d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def num_params(defs: Tree) -> int:
+    total = 0
+    for _, d in _walk(defs):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total
+
+
+def fit_spec(shape: tuple[int, ...], axes_map: tuple, mesh) -> P:
+    """Turn mapped mesh axes into a PartitionSpec, dropping any mesh axis
+    whose size does not divide the dimension (auto-fallback, logged by
+    callers) and deduping a mesh axis that appears for several dims (first
+    dim wins). ``axes_map`` entries are None, a mesh axis name, or a tuple
+    of mesh axis names."""
+    out = []
+    used: set = set()
+    for dim, m in zip(shape, axes_map):
+        if m is None:
+            out.append(None)
+            continue
+        names = (m,) if isinstance(m, str) else tuple(m)
+        keep = []
+        sz = 1
+        for name in names:
+            if name not in mesh.shape or name in used:
+                continue
+            nsz = mesh.shape[name]
+            if dim % (sz * nsz) == 0:
+                keep.append(name)
+                sz *= nsz
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def spec_tree(defs: Tree, rules: dict[str, Any], mesh) -> Tree:
+    """logical axes -> PartitionSpec tree under ``rules`` for ``mesh``."""
+
+    def one(path, d: ParamDef) -> P:
+        mapped = tuple(rules.get(a) if a is not None else None for a in d.axes)
+        return fit_spec(d.shape, mapped, mesh)
+
+    return map_defs(one, defs)
+
+
+def stack(defs: Tree, n: int, axis_name: str = "layers") -> Tree:
+    """Prepend a stacked-layer axis (for jax.lax.scan over layers). The
+    fan-in axis of fan_in-initialized defs shifts with it."""
+    return map_defs(
+        lambda p, d: ParamDef((n,) + d.shape, d.dtype, d.init, d.scale,
+                              (axis_name,) + d.axes, d.fan_axis + 1),
+        defs,
+    )
+
+
+def cast_tree(params: Tree, dtype) -> Tree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )

@@ -1,0 +1,114 @@
+"""AdamW with decoupled weight decay, optional reduced-precision moments
+(bf16 or blockwise-int8 — the 8-bit-Adam trick that halves optimizer HBM at
+trillion-parameter scale), and a warmup-cosine schedule.
+
+State is a plain pytree (dict) so checkpointing/resharding is trivial.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+Q_BLOCK = 256
+
+
+def _quantize8(x: jnp.ndarray):
+    """Blockwise symmetric int8 quantization over the flattened array."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % Q_BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, Q_BLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(fp / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale.astype(F32)
+
+
+def _dequantize8(q, scale, shape):
+    fp = q.astype(F32) * scale
+    return fp.reshape(-1)[: int(jnp.prod(jnp.array(shape)))].reshape(shape)
+
+
+def _deq_static(q, scale, shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return (q.astype(F32) * scale).reshape(-1)[:n].reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any                      # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+    def init(self, params):
+        def zero_like(p):
+            if self.state_dtype == "int8":
+                q, s = _quantize8(jnp.zeros_like(p, F32))
+                return {"q": q, "s": s}
+            dt = jnp.bfloat16 if self.state_dtype == "bfloat16" else F32
+            return jnp.zeros(p.shape, dt)
+
+        return {
+            "m": jax.tree.map(zero_like, params),
+            "v": jax.tree.map(zero_like, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _read(self, s, shape):
+        if self.state_dtype == "int8":
+            return _deq_static(s["q"], s["s"], shape)
+        return s.astype(F32)
+
+    def _write(self, x):
+        if self.state_dtype == "int8":
+            q, s = _quantize8(x)
+            return {"q": q, "s": s}
+        dt = jnp.bfloat16 if self.state_dtype == "bfloat16" else F32
+        return x.astype(dt)
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        c1 = 1.0 - self.b1 ** step.astype(F32)
+        c2 = 1.0 - self.b2 ** step.astype(F32)
+
+        def upd(g, m_s, v_s, p):
+            g = g.astype(F32)
+            m = self.b1 * self._read(m_s, g.shape) + (1 - self.b1) * g
+            v = self.b2 * self._read(v_s, g.shape) + (1 - self.b2) * g * g
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(F32)
+            new_p = (p.astype(F32) - lr * delta).astype(p.dtype)
+            return new_p, self._write(m), self._write(v)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        step = step.astype(F32) if hasattr(step, "astype") else float(step)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

@@ -1,0 +1,2 @@
+from repro.parallel.axes import axis_rules, logical, mesh_axis_size  # noqa: F401
+from repro.parallel.sharding import Recipe, recipe_for  # noqa: F401

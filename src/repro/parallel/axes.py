@@ -1,0 +1,68 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names::
+
+    h = logical(h, "batch", "seq", "embed")
+
+Inside an ``axis_rules(recipe, mesh)`` context these become
+``with_sharding_constraint`` calls; outside any context they are no-ops, so
+the same model code runs single-device tests and 512-chip dry-runs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.nn.param import fit_spec
+
+_STATE = threading.local()
+
+
+def current():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(recipe, mesh):
+    prev = current()
+    _STATE.ctx = (recipe, mesh)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def logical(x, *axes):
+    """Apply a sharding constraint derived from logical activation axes."""
+    ctx = current()
+    if ctx is None:
+        return x
+    recipe, mesh = ctx
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} != axes {axes}")
+    mapped = tuple(recipe.acts.get(a) for a in axes)
+    spec = fit_spec(x.shape, mapped, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def mesh_axis_size(*logical_axes) -> int:
+    """Product of mesh-axis sizes currently mapped to these activation axes
+    (1 outside a context). Used e.g. to pick Ulysses a2a group size."""
+    ctx = current()
+    if ctx is None:
+        return 1
+    recipe, mesh = ctx
+    size = 1
+    for a in logical_axes:
+        m = recipe.acts.get(a)
+        if m is None:
+            continue
+        names = (m,) if isinstance(m, str) else m
+        for n in names:
+            if n in mesh.shape:
+                size *= mesh.shape[n]
+    return size

@@ -1,0 +1,71 @@
+"""Pipeline parallelism (GPipe-style microbatch schedule).
+
+Stages are laid out across a mesh axis; activations move stage-to-stage
+with ``collective_permute`` inside a shard_map; the schedule runs
+``n_micro + n_stages - 1`` ticks (the classic bubble). Used as an opt-in
+recipe knob — at 256-512 chips the DP×TP×SP×EP recipes dominate for the
+assigned shapes (DESIGN.md §5), but the substrate is here and tested for
+the 1000+ node regime where a model axis alone cannot hold the layers.
+
+``pipeline_apply(stage_fn, stage_params, microbatches, mesh, axis)``:
+  stage_params: leading dim = n_stages (sharded over ``axis``),
+  microbatches: (n_micro, mb, ...) replicated input,
+  returns (n_micro, mb, ...) outputs (from the last stage).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stage_params, microbatches, mesh,
+                   axis: str = "model"):
+    n_stages = mesh.shape[axis]
+    n_micro = microbatches.shape[0]
+    total = n_micro + n_stages - 1
+    perm_fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def inner(params_local, mbs):
+        # params_local: (1, ...) this stage's slice; mbs replicated
+        params_local = jax.tree.map(lambda x: x[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        mb_shape = mbs.shape[1:]
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any remain)
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            inp = jax.lax.dynamic_index_in_dim(mbs, mb_idx, 0,
+                                               keepdims=False)
+            x = jnp.where(stage == 0, inp, buf)
+            y = stage_fn(params_local, x)
+            # collect at the last stage: microbatch m exits at tick
+            # t = m + n_stages - 1
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            take = (stage == n_stages - 1) & (t >= n_stages - 1)
+            outs = jax.lax.cond(
+                take,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y.astype(o.dtype), out_idx, 0),
+                lambda o: o, outs)
+            # ship activations downstream
+            buf = jax.lax.ppermute(y, axis, perm_fwd)
+            return (buf, outs), None
+
+        buf0 = jnp.zeros(mb_shape, microbatches.dtype)
+        outs0 = jnp.zeros((n_micro,) + mb_shape, microbatches.dtype)
+        (buf, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                      jnp.arange(total))
+        # outputs live on the last stage; broadcast to all for out_spec
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, 0.0), axis)
+        return outs
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(pspec, P()),
+        out_specs=P(),
+        check_vma=False)(stage_params, microbatches)

@@ -1,0 +1,114 @@
+"""Sharding recipes: how logical axes map onto production mesh axes.
+
+One recipe per input-shape kind; `recipe_for` adapts to single-pod
+(data, model) and multi-pod (pod, data, model) meshes. The mapping policy
+(DESIGN.md §5):
+
+* parameters: FSDP over "data" (embed dim), TP over "model"
+  (heads / mlp / vocab / experts).
+* train:   batch over (pod, data); sequence resident (Megatron-SP style
+           constraints at layer boundaries via the "seq_outer" axis).
+* prefill: batch over data, sequence over model — Ulysses a2a inside
+           attention (the paper's graph parallelism, §III-C).
+* decode:  batch over data, KV-cache sequence over model (flash-decode
+           partial-softmax layout).
+* long:    batch=1 -> sequence over (data, model) [+pod].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+# Parameter logical axes (see models/*.py):
+#   embed, mlp, heads, kv_heads, head_dim, qkv, vocab, experts, expert_mlp,
+#   layers, inner (ssm), state, conv, classes
+_PARAM_RULES: dict[str, Any] = {
+    "embed": ("pod", "data"),  # FSDP / ZeRO-3 shard (pod axis included:
+                               # params must keep sharding down at 2+ pods)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",       # expert parallelism
+    "expert_mlp": None,
+    "inner": "model",         # ssm d_inner
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "classes": None,
+    "bias_heads": None,
+    "degree": None,
+    "spd": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    name: str
+    params: Mapping[str, Any]
+    acts: Mapping[str, Any]
+    ulysses: bool = False     # explicit a2a sequence parallelism in attention
+    pp_stages: int = 1
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _acts(kind: str, multi_pod: bool) -> dict[str, Any]:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if kind == "train":
+        return {
+            "batch": dp, "seq": None, "seq_outer": "model",
+            "embed": None, "heads": "model", "kv_heads": "model",
+            "head_dim": None, "mlp": "model", "vocab": "model",
+            "experts": "model", "kv_seq": None, "inner": "model",
+            "state": None, "classes": None,
+        }
+    if kind == "prefill":
+        return {
+            "batch": dp, "seq": "model", "seq_outer": "model",
+            "embed": None, "heads": "model", "kv_heads": "model",
+            "head_dim": None, "mlp": "model", "vocab": "model",
+            "experts": "model", "kv_seq": "model", "inner": "model",
+            "state": None, "classes": None,
+        }
+    if kind == "decode":
+        return {
+            "batch": dp, "seq": None, "seq_outer": None,
+            "embed": None, "heads": "model", "kv_heads": "model",
+            "head_dim": None, "mlp": "model", "vocab": "model",
+            "experts": "model", "kv_seq": "model", "inner": "model",
+            "state": None, "classes": None,
+        }
+    if kind == "long":  # batch too small to shard; sequence everywhere
+        seq = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return {
+            "batch": None, "seq": seq, "seq_outer": seq,
+            "embed": None, "heads": "model", "kv_heads": "model",
+            "head_dim": None, "mlp": "model", "vocab": "model",
+            "experts": "model", "kv_seq": seq, "inner": "model",
+            "state": None, "classes": None,
+        }
+    raise ValueError(kind)
+
+
+def recipe_for(shape_cfg, mesh, *, ulysses: bool | None = None) -> Recipe:
+    multi_pod = "pod" in mesh.shape
+    kind = shape_cfg.kind
+    if kind == "decode" and shape_cfg.global_batch == 1:
+        kind = "long"
+    if ulysses is None:
+        # §Perf A6 (EXPERIMENTS.md): a2a sequence parallelism beats the
+        # Megatron AG/AR pattern for TRAINING too (the paper's §III-C
+        # insight applied beyond its original scope) — collective term
+        # dropped 3.1x on the MoE cell, improvements on every arch.
+        ulysses = kind in ("prefill", "train")
+    return Recipe(
+        name=f"{kind}{'_mp' if multi_pod else ''}"
+             f"{'_ulysses' if ulysses else ''}",
+        params=dict(_PARAM_RULES),
+        acts=_acts(kind, multi_pod),
+        ulysses=ulysses,
+    )

@@ -1,0 +1,101 @@
+"""Ulysses-style all-to-all sequence parallelism — the runtime half of the
+paper's Cluster-aware Graph Parallelism (§III-C).
+
+Sequence (graph-token) dim is sharded over the "model" mesh axis between
+layers. Inside attention we all-to-all: gather the sequence dim, split the
+head dim, so each device sees the *full* (cluster-reordered) sequence for
+H/P heads — exactly the layout the topology-induced sparse pattern needs.
+A second all-to-all restores sequence sharding. Per-device comm volume is
+O(S/P) (4·S·d/P per layer), vs O(S) for all-gather schemes — Table in
+§III-C; we validate this from compiled HLO in benchmarks/scalability.py.
+
+GQA note: when kv_heads < P, kv heads are replicated ``r = P // kv`` times
+before the a2a (DeepSpeed-Ulysses GQA handling); the replication keeps the
+q-head -> kv-head grouping aligned (verified in tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _fit_dp(dp_axes, mesh, batch: int):
+    """Keep only data-parallel axes that divide the batch dim (shard_map
+    requires exact divisibility; B=1 graph batches shard nowhere)."""
+    out = []
+    prod = 1
+    for a in dp_axes:
+        if a in mesh.shape and batch % (prod * mesh.shape[a]) == 0:
+            out.append(a)
+            prod *= mesh.shape[a]
+    return tuple(out)
+
+
+def can_ulysses(n_heads: int, n_kv: int, seq: int, p: int) -> bool:
+    if p <= 1 or n_heads % p or seq % p:
+        return False
+    r = max(1, -(-p // n_kv))
+    kvr = n_kv * r
+    if kvr % p:
+        return False
+    hp, kvp = n_heads // p, kvr // p
+    return hp % max(kvp, 1) == 0
+
+
+def ulysses_attention(q, k, v, *, mesh, attn_fn, axis: str = "model",
+                      dp_axes=("data",)):
+    """q: (B, S/P, H, Dh), k/v: (B, S/P, KV, Dh), sequence-sharded on
+    ``axis``. attn_fn(q, k, v) runs on full-sequence, head-sharded tensors.
+    Returns (B, S/P, H, Dh) sequence-sharded again."""
+    p = mesh.shape[axis]
+    H, KV = q.shape[2], k.shape[2]
+    r = max(1, -(-p // KV))
+
+    dp = _fit_dp(dp_axes, mesh, q.shape[0])
+    spec = P(dp if dp else None, axis, None, None)
+
+    def inner(ql, kl, vl):
+        if r > 1:
+            kl = jnp.repeat(kl, r, axis=2)
+            vl = jnp.repeat(vl, r, axis=2)
+        # (B, S/P, H, Dh) -> (B, S, H/P, Dh)
+        ql = jax.lax.all_to_all(ql, axis, split_axis=2, concat_axis=1,
+                                tiled=True)
+        kl = jax.lax.all_to_all(kl, axis, split_axis=2, concat_axis=1,
+                                tiled=True)
+        vl = jax.lax.all_to_all(vl, axis, split_axis=2, concat_axis=1,
+                                tiled=True)
+        ol = attn_fn(ql, kl, vl)
+        # back: (B, S, H/P, Dh) -> (B, S/P, H, Dh)
+        return jax.lax.all_to_all(ol, axis, split_axis=1, concat_axis=2,
+                                  tiled=True)
+
+    return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)
+
+
+def seqpar_attention(q, k, v, *, mesh, attn_fn, axis: str = "model",
+                     dp_axes=("data",)):
+    """Sequence-parallel attention for archs whose head counts cannot split
+    across the axis (e.g. smollm's 9 heads on a 16-way axis): q stays
+    sequence-sharded; k/v are all-gathered (bf16) once per layer inside an
+    explicit shard_map, and each device computes its S/P x S slice.
+    attn_fn(q_loc, k_full, v_full, q_offset) must honor the q offset for
+    causal masking. Comm: 2*S*KV*Dh per layer — tiny vs the 1/P compute.
+
+    (This replaces GSPMD's guess, which replicated the whole attention —
+    §Perf iteration B1 in EXPERIMENTS.md.)"""
+    p = mesh.shape[axis]
+    dp = _fit_dp(dp_axes, mesh, q.shape[0])
+    spec = P(dp if dp else None, axis, None, None)
+
+    def inner(ql, kl, vl):
+        kf = jax.lax.all_gather(kl, axis, axis=1, tiled=True)
+        vf = jax.lax.all_gather(vl, axis, axis=1, tiled=True)
+        off = jax.lax.axis_index(axis) * ql.shape[1]
+        return attn_fn(ql, kf, vf, off)
+
+    return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec, check_vma=False)(q, k, v)

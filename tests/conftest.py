@@ -1,0 +1,12 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device. Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

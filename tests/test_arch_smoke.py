@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch's
+reduced-config family variant runs one train step + one decode step on CPU
+with finite outputs and correct shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_smoke_config
+from repro.models import build
+from repro.nn import param as nnp
+from repro.optim.adamw import AdamW
+
+
+def _smoke_batch(cfg, B=2, S=64):
+    if cfg.family == "vlm":
+        return {
+            "patches": jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
+                                 jnp.bfloat16),
+            "tokens": jnp.ones((B, S - cfg.frontend_tokens), jnp.int32),
+            "labels": jnp.ones((B, S - cfg.frontend_tokens), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        return {
+            "frames": jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
+                                jnp.bfloat16),
+            "tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32),
+        }
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+    opt = AdamW(lr=1e-3)
+    ost = opt.init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(p, b)
+        new_p, new_o = opt.update(grads, o, p)
+        return loss, new_p, new_o
+
+    loss, new_p, _ = step(params, ost, batch)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)), params, new_p),
+        0.0)
+    assert delta > 0, f"{arch}: no param update"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S_cache = 2, 32
+    cache = nnp.init_tree(model.cache_defs(B, S_cache), jax.random.PRNGKey(1))
+    tokens = jnp.ones((B, 1), jnp.int32)
+    logits, new_cache = jax.jit(
+        lambda p, c, t: model.decode(p, c, t, jnp.int32(5)))(
+        params, cache, tokens)
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert logits.shape[2] == cfg.vocab_padded
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    # cache must actually be written (attention kv or ssm state changed)
+    before = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x.astype(jnp.float32)).sum()),
+        cache, 0.0)
+    after = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x.astype(jnp.float32)).sum()),
+        new_cache, 0.0)
+    assert after != before, f"{arch}: cache unchanged"
+
+
+@pytest.mark.parametrize("arch", PAPER_ARCHS)
+def test_smoke_graph_models(arch):
+    from repro.core.graph import sbm_graph
+    from repro.data.graph_pipeline import prepare_node_task
+
+    cfg = get_smoke_config(arch)
+    g = sbm_graph(200, 4, 0.06, 0.002, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    prep = prepare_node_task(g, cfg, bq=16, bk=16, d_b=8)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in prep.batch.items()}
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss)
+    assert 0.0 <= float(metrics["acc"]) <= 1.0
+
+
+def test_full_config_param_counts():
+    """Full (published) configs must match their nameplate sizes."""
+    from repro.configs import get_config
+
+    expect = {
+        "smollm_135m": (0.12e9, 0.15e9),
+        "qwen3_0_6b": (0.55e9, 0.65e9),
+        "qwen3_1_7b": (1.6e9, 1.9e9),
+        "qwen3_4b": (3.8e9, 4.3e9),
+        "internvl2_76b": (65e9, 76e9),   # LM backbone (ViT stubbed)
+        "jamba_v0_1_52b": (49e9, 54e9),
+        "qwen3_moe_235b_a22b": (225e9, 245e9),
+        "kimi_k2_1t_a32b": (0.95e12, 1.1e12),
+        "seamless_m4t_medium": (0.8e9, 1.3e9),
+        "mamba2_2_7b": (2.6e9, 2.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = build(get_config(arch)).n_params()
+        assert lo <= n <= hi, f"{arch}: {n:,} outside [{lo:,}, {hi:,}]"

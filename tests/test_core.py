@@ -1,0 +1,135 @@
+"""TorchGT core: reordering, conditions, reformation, auto-tuner.
+Includes hypothesis property tests on the system invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.auto_tuner import AutoTuner, choose_tpu_tiles
+from repro.core.conditions import check_conditions
+from repro.core.graph import Graph, sbm_graph
+from repro.core.reformation import (augment_edges, build_layout,
+                                    lm_local_global_layout)
+from repro.core.reorder import cluster_reorder, cut_ratio
+
+
+def test_reorder_recovers_sbm_clusters():
+    """Planted SBM clusters must be (mostly) recovered: cut ratio far below
+    the shuffled baseline."""
+    g = sbm_graph(600, 4, p_in=0.05, p_out=0.0005, seed=0, shuffle=True)
+    perm, assign = cluster_reorder(g, 4)
+    cr = cut_ratio(g, assign)
+    assert cr < 0.25, f"cut ratio {cr} too high"
+
+
+def test_permutation_preserves_connectivity():
+    g = sbm_graph(300, 3, 0.05, 0.001, seed=1)
+    perm, _ = cluster_reorder(g, 3)
+    gp = g.permuted(perm)
+    assert gp.e == g.e
+    # degree multiset preserved
+    ind0, _ = g.degrees()
+    ind1, _ = gp.degrees()
+    assert sorted(ind0.tolist()) == sorted(ind1.tolist())
+
+
+def test_conditions_on_augmented_pattern():
+    g = sbm_graph(200, 2, 0.05, 0.001, seed=2)
+    r, c, s = augment_edges(g, n_global=1, chain=True)
+    gaug = Graph(s, r.astype(np.int32), c.astype(np.int32))
+    rep = check_conditions(gaug, n_layers=2)
+    assert rep.c1_self_loops and rep.c2_hamiltonian and rep.c3_reachable
+    assert rep.est_diameter <= 2  # global token bounds diameter
+
+
+def test_conditions_fail_without_augmentation():
+    # two disconnected cliques: C3 must fail (diameter infinite)
+    src = np.array([0, 1, 2, 0, 3, 4, 5, 3], np.int32)
+    dst = np.array([1, 2, 0, 2, 4, 5, 3, 5], np.int32)
+    g = Graph(6, src, dst).with_self_loops()
+    rep = check_conditions(g, n_layers=4)
+    assert not rep.c3_reachable
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(80, 400), k=st.integers(1, 4),
+       beta_mult=st.floats(0.5, 10.0))
+def test_layout_invariants(n, k, beta_mult):
+    """Property: every layout row references valid k-blocks; self-attention
+    (diagonal) is always present (C1); density <= 1."""
+    g = sbm_graph(n, max(1, k), 0.08, 0.002, seed=n)
+    lay = build_layout(g, bq=16, bk=16, k_clusters=max(1, k), d_b=8,
+                       beta_thre=beta_mult * g.sparsity, n_global=1)
+    nk = lay.seq_len // lay.bk
+    assert lay.block_idx.shape[0] == lay.seq_len // lay.bq
+    valid = lay.block_idx[lay.block_idx >= 0]
+    assert valid.size == 0 or valid.max() < nk
+    assert 0 < lay.density() <= 1.0
+    # C1: diagonal block present in every row covering real nodes
+    for i in range((g.n + 1) // lay.bq):
+        diag = (i * lay.bq) // lay.bk
+        assert diag in set(lay.block_idx[i].tolist()), f"row {i} no diagonal"
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([256, 512, 1024]), w=st.sampled_from([64, 128, 256]),
+       ng=st.sampled_from([0, 64]))
+def test_lm_layout_invariants(s, w, ng):
+    lay = lm_local_global_layout(s, bq=64, bk=64, window=w, n_global=ng)
+    nq = s // 64
+    for i in range(nq):
+        row = lay.block_idx[i]
+        sel = row[row >= 0]
+        # causal: no block beyond the diagonal
+        assert sel.max() <= (i * 64) // 64
+        # the diagonal block itself is always included
+        assert (i * 64) // 64 in sel.tolist()
+
+
+def test_reformation_transfers_only_sparse_clusters():
+    g = sbm_graph(512, 4, 0.08, 0.0005, seed=3)
+    lay_none = build_layout(g, bq=16, bk=16, k_clusters=4, d_b=8,
+                            beta_thre=0.0, n_global=1)   # no transfer
+    lay_all = build_layout(g, bq=16, bk=16, k_clusters=4, d_b=8,
+                           beta_thre=1.0, n_global=1)    # everything
+    assert lay_none.stats["clusters_transferred"] == 0
+    assert lay_all.stats["clusters_transferred"] >= \
+        lay_none.stats["clusters_transferred"]
+    # transferring cannot *increase* kept exact edges
+    assert lay_all.stats["edges_kept"] <= lay_none.stats["edges_kept"]
+
+
+def test_auto_tuner_ladder():
+    t = AutoTuner(beta_g=0.01, delta=3)
+    assert t.beta_thre == pytest.approx(0.01)
+    # steadily improving loss at constant speed -> tuner moves UP the ladder
+    for i in range(10):
+        t.update(loss=5.0 - 0.3 * i, epoch_time=1.0)
+    assert t.beta_thre > 0.01
+    pos_before = t._pos
+    # loss plateaus -> LDR worsens -> tuner backs off
+    for i in range(6):
+        t.update(loss=2.0, epoch_time=1.0)
+    assert t._pos <= pos_before
+
+
+def test_tpu_tile_chooser_fits_vmem():
+    for mb in (4, 8, 16, 64):
+        tiles = choose_tpu_tiles(d_head=128, mb=mb)
+        assert tiles["bq"] % 128 == 0 and tiles["bk"] % 128 == 0
+        assert tiles["vmem_bytes"] <= 16 * 1024 * 1024
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_augment_edges_idempotent_invariants(seed):
+    g = sbm_graph(100, 2, 0.05, 0.002, seed=seed)
+    r, c, s = augment_edges(g, n_global=2, chain=True)
+    assert s == g.n + 2
+    # unique edges
+    key = r * (s + 1) + c
+    assert len(np.unique(key)) == len(key)
+    # self loops for every position
+    loops = np.count_nonzero(r == c)
+    assert loops == s

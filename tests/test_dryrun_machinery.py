@@ -1,0 +1,128 @@
+"""Dry-run / roofline machinery: the HLO analyzer's trip-count-corrected
+counts, verified against programs with known FLOPs; spec-fitting rules."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import analyze
+from repro.nn.param import fit_spec
+
+
+def _flops_of(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze(txt)["flops"]
+
+
+def test_costanalysis_counts_loop_bodies_once():
+    """Documents the XLA behaviour that motivates hlo_analysis."""
+    x = jnp.zeros((64, 64))
+    ws = jnp.zeros((6, 64, 64))
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)[0]
+
+    ca = jax.jit(f).lower(x, ws).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] == pytest.approx(2 * 64 ** 3, rel=0.05)  # ONE body
+
+
+def test_analyzer_exact_on_scan():
+    x = jnp.zeros((64, 64))
+    ws = jnp.zeros((6, 64, 64))
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)[0]
+
+    assert _flops_of(f, x, ws) == pytest.approx(6 * 2 * 64 ** 3, rel=0.02)
+
+
+def test_analyzer_exact_on_nested_scan():
+    x = jnp.zeros((64, 64))
+    ws = jnp.zeros((6, 64, 64))
+
+    def g(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            return jax.lax.scan(inner, c, None, length=4)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    assert _flops_of(g, x, ws) == pytest.approx(24 * 2 * 64 ** 3, rel=0.02)
+
+
+def test_analyzer_counts_remat_recompute():
+    """jax.checkpoint recompute must appear in corrected flops (~2x fwd
+    inside the scanned layer for fwd+remat, plus backward dots)."""
+    x = jnp.ones((32, 32))
+    ws = jnp.ones((4, 32, 32))
+
+    def fwd(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(jax.checkpoint(body), x, ws)[0].sum()
+
+    plain = _flops_of(fwd, x, ws)
+    grad = _flops_of(jax.grad(fwd), x, ws)
+    # backward with remat >= 3x forward dots (fwd + recompute + 2 bwd dots
+    # minus scheduling detail); require a conservative 2.5x
+    assert grad >= 2.5 * plain
+
+
+def test_analyzer_vs_unrolled_model():
+    """Cross-check on a real (tiny) LM: scanned flops == unrolled flops."""
+    from repro.configs import get_smoke_config
+    from repro.models import build
+
+    cfg = get_smoke_config("qwen3_0_6b").replace(remat="none")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 64), jnp.int32),
+             "labels": jnp.ones((2, 64), jnp.int32)}
+    f_scan = _flops_of(lambda p, b: model.loss(p, b)[0], params, batch)
+    assert f_scan > 0
+    # hand model: >= 6 * n_active * tokens fwd+bwd is for grad; loss alone
+    # ~2*N*D: check within 3x factor (attention etc. on top)
+    from repro.launch.roofline import active_params
+    n = active_params(cfg, model)
+    lower = 2.0 * n * 2 * 64
+    assert f_scan >= 0.8 * lower
+    assert f_scan <= 6.0 * lower
+
+
+def test_fit_spec_divisibility_and_dedup():
+    # fit_spec only reads mesh.shape — a mock suffices (the real pytest
+    # process has a single device, so no 8-device mesh can be built here)
+    class M:
+        shape = {"data": 2, "model": 4}
+
+    mesh = M()
+    # non-divisible dims fall back to replicated
+    assert fit_spec((7, 12), ("model", "model"), mesh) == P(None, "model")
+    # dedup: same axis twice -> first dim wins
+    assert fit_spec((8, 12), ("model", "model"), mesh) == P("model", None)
+    # tuple mapping with partial fit
+    assert fit_spec((8, 4), (("data", "model"), None), mesh) == \
+        P(("data", "model"), None)
+    got = fit_spec((2, 4), (("data", "model"), None), mesh)
+    assert got in (P(("data",), None), P("data", None))
+
+
+def test_collective_accounting():
+    """all_to_all / psum payloads show up with right magnitudes (8 fake
+    devices via subprocess in test_distributed; here: shard_map on 1 device
+    mesh emits no collectives)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.ones((8, 8))
+
+    def f(x):
+        return jax.shard_map(lambda a: jax.lax.psum(a, "data"), mesh=mesh,
+                             in_specs=P(None, None),
+                             out_specs=P(None, None), check_vma=False)(x)
+
+    txt = jax.jit(f).lower(x).compile().as_text()
+    res = analyze(txt)
+    assert res["coll"]["count"] >= 0  # parses without error
