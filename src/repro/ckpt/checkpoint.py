@@ -1,8 +1,8 @@
 """Sharded, async, elastic checkpointing.
 
-Format: a step directory ``step_{n:08d}/`` containing one ``.npy.zst`` blob
-per tree leaf (zstd-compressed raw array) plus ``manifest.json`` (paths,
-shapes, dtypes, step metadata). Writes go to ``.tmp-*`` and are renamed
+Format: a step directory ``step_{n:08d}/`` containing one compressed blob
+per tree leaf (raw array bytes) plus ``manifest.json`` (paths, shapes,
+dtypes, codec, step metadata). Writes go to ``.tmp-*`` and are renamed
 atomically; a ``COMMITTED`` marker makes partially-written checkpoints
 invisible to ``latest_step``.
 
@@ -13,6 +13,11 @@ invisible to ``latest_step``.
   with the *target* sharding, so the same checkpoint restores onto any
   mesh shape (tested: 1 -> 8 devices and back). At true multi-pod scale
   the same manifest format extends to per-shard blobs.
+* codecs: zstd when the optional ``zstandard`` package is installed, else
+  stdlib zlib. The codec is chosen per checkpoint at save time and
+  recorded in the manifest, so restore always picks the right
+  decompressor regardless of what the restoring host has installed
+  (manifests predating the field are zstd — the only codec that existed).
 """
 
 from __future__ import annotations
@@ -21,12 +26,44 @@ import json
 import os
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
-import zstandard
 
 SEP = "/"
+
+
+def _compress(codec: str, data: bytes) -> bytes:
+    if codec == "zstd":
+        import zstandard
+        return zstandard.ZstdCompressor(level=1).compress(data)
+    if codec == "zlib":
+        return zlib.compress(data, 1)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress(codec: str, data: bytes) -> bytes:
+    if codec == "zstd":
+        try:
+            import zstandard
+        except ImportError as e:
+            raise RuntimeError(
+                "checkpoint was written with the zstd codec; install the "
+                "optional 'zstandard' package to restore it") from e
+        return zstandard.ZstdDecompressor().decompress(data)
+    if codec == "zlib":
+        return zlib.decompress(data)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def default_codec() -> str:
+    """zstd when available (fast, high ratio), zlib otherwise (stdlib)."""
+    try:
+        import zstandard  # noqa: F401
+        return "zstd"
+    except ImportError:
+        return "zlib"
 
 
 def _flatten(tree, prefix=()):
@@ -50,9 +87,15 @@ def _unflatten(flat):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 codec: str | None = None):
         self.dir = directory
         self.keep = keep
+        self.codec = codec or default_codec()
+        if self.codec not in ("zstd", "zlib"):
+            # fail fast: the async save path compresses on a daemon
+            # thread, where a bad codec would only die in a traceback
+            raise ValueError(f"unknown checkpoint codec {self.codec!r}")
         self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
 
@@ -63,17 +106,18 @@ class Checkpointer:
         flat = _flatten(tree)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
 
+        codec = self.codec
+
         def write():
             tmp = os.path.join(self.dir, f".tmp-{step:08d}")
             final = os.path.join(self.dir, f"step_{step:08d}")
             shutil.rmtree(tmp, ignore_errors=True)
             os.makedirs(tmp)
-            cctx = zstandard.ZstdCompressor(level=1)
-            manifest = {"step": step, "leaves": {}}
+            manifest = {"step": step, "codec": codec, "leaves": {}}
             for i, (k, v) in enumerate(host.items()):
-                fn = f"leaf_{i:05d}.npy.zst"
+                fn = f"leaf_{i:05d}.npy.{codec}"
                 with open(os.path.join(tmp, fn), "wb") as f:
-                    f.write(cctx.compress(v.tobytes()))  # ml_dtypes handles bf16
+                    f.write(_compress(codec, v.tobytes()))  # ml_dtypes handles bf16
                 manifest["leaves"][k] = {
                     "file": fn, "shape": list(v.shape), "dtype": str(v.dtype)}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -122,11 +166,11 @@ class Checkpointer:
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        dctx = zstandard.ZstdDecompressor()
+        codec = manifest.get("codec", "zstd")  # pre-codec manifests: zstd
         flat = {}
         for k, meta in manifest["leaves"].items():
             with open(os.path.join(d, meta["file"]), "rb") as f:
-                raw = dctx.decompress(f.read())
+                raw = _decompress(codec, f.read())
             arr = np.frombuffer(raw, np.dtype(meta["dtype"])).reshape(
                 meta["shape"])
             flat[k] = arr

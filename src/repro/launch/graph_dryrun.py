@@ -19,6 +19,7 @@ import numpy as np       # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.core.graph_model import graph_loss  # noqa: E402
 from repro.launch.hlo_analysis import analyze  # noqa: E402
@@ -72,7 +73,7 @@ def run(arch: str, S: int, multi_pod: bool = False):
     }
     step = make_train_step(model, recipe, mesh)
     jf = jax.jit(step, in_shardings=((st_shard, bshard)), donate_argnums=(0,))
-    with mesh:
+    with compat.use_mesh(mesh):
         lowered = jf.lower(st_abs, batch)
     compiled = lowered.compile()
     ma = compiled.memory_analysis()

@@ -229,6 +229,18 @@ def analyze(hlo: str, entry: str | None = None) -> dict:
     return res
 
 
+def comm_summary(hlo: str) -> dict:
+    """Per-collective payload bytes (trip-count corrected) from compiled
+    HLO — the measurement behind the §III-C comm-volume claims. Returns
+    {"bytes": {collective: bytes}, "count": n, "total_bytes": sum,
+    "flops": dot_flops} (one analyze() pass; flops come along free)."""
+    res = analyze(hlo)
+    coll = dict(res["coll"])
+    count = coll.pop("count")
+    return {"bytes": coll, "count": count,
+            "total_bytes": sum(coll.values()), "flops": res["flops"]}
+
+
 def top_ops(hlo: str, n: int = 12) -> dict:
     """Profiler view: the biggest dot ops and collective ops, with their
     trip-count-multiplied totals. Returns {"dots": [...], "colls": [...]}

@@ -6,20 +6,21 @@ axis crosses DCN; recipes map it to extra data parallelism (or extra
 sequence parallelism for long-context cells).
 
 Defined as functions so importing this module never touches jax device
-state (jax locks the device count on first use).
+state (jax locks the device count on first use). All construction goes
+through repro.compat so the same code runs on JAX 0.4.x through current.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int | None = None):
@@ -27,6 +28,4 @@ def make_host_mesh(model: int = 1, data: int | None = None):
     used by tests and the CPU trainer."""
     n = len(jax.devices())
     data = data or max(1, n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import SHAPES, get_config
 from repro.models import batch_spec, build
 from repro.nn import param as nnp
@@ -206,7 +207,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, ulysses=None,
 def lower_cell(cell, mesh):
     jf = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
                  donate_argnums=cell["donate"])
-    with mesh:
+    with compat.use_mesh(mesh):
         lowered = jf.lower(*cell["args"])
     return lowered
 

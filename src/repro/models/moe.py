@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.nn import param as nnp
 from repro.parallel import axes as pax
 
@@ -175,12 +176,11 @@ def moe_apply(p, cfg, x, *, capacity_factor: float = 1.25):
             aux = jax.lax.pmean(aux, all_axes)
             return y, aux
 
-        y, aux = jax.shard_map(
+        y, aux = compat.shard_map(
             wrapped,
             mesh=mesh,
             in_specs=(pspec, in_x),
             out_specs=(in_x, P()),
-            check_vma=False,
         )(p_ep, x)
     if cfg.moe_shared_experts:
         from repro.models.layers import mlp

@@ -20,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 F32 = jnp.float32
 
 
@@ -88,11 +90,11 @@ def make_compressed_grad_fn(loss_fn, mesh, *, codec: str = "int8",
         specs_b = jax.tree.map(lambda _: P(dp_axis), batch)
         specs_p = jax.tree.map(lambda _: pspec_rep, params)
         specs_r = jax.tree.map(lambda _: pspec_rep, residuals)
-        return jax.shard_map(
+        return compat.shard_map(
             local, mesh=mesh,
             in_specs=(specs_p, specs_b, specs_r),
-            out_specs=(pspec_rep, specs_p, specs_r),
-            check_vma=False)(params, batch, residuals)
+            out_specs=(pspec_rep, specs_p, specs_r))(params, batch,
+                                                     residuals)
 
     return wrapper
 

@@ -1,2 +1,4 @@
 from repro.parallel.axes import axis_rules, logical, mesh_axis_size  # noqa: F401
+from repro.parallel.cluster_parallel import (can_shard_cluster,  # noqa: F401
+                                             sharded_cluster_attention)
 from repro.parallel.sharding import Recipe, recipe_for  # noqa: F401

@@ -1,0 +1,107 @@
+"""Sharded cluster-sparse attention — Cluster-aware Graph Parallelism
+(paper §III-C) composed with the Dual-interleaved sparse path (§III-B/D).
+
+The cluster-reordered graph sequence is sharded over the "model" mesh axis
+between layers (each device holds S/P contiguous graph tokens). Inside
+attention we all-to-all to head-sharded *full*-sequence form — every device
+then sees the whole cluster-reordered sequence for H/P heads, so the
+topology-induced block pattern (ClusterLayout) applies completely
+unchanged: the same ``block_idx`` / ``buckets`` drive the blocked-gather
+oracle (or the Pallas kernel on TPU) that single-device training uses. A
+second all-to-all restores sequence sharding.
+
+Per-device a2a volume stays O(S/P) per tensor (4·S·d/P per layer) — the
+§III-C comm-complexity claim, measured from compiled HLO in
+benchmarks/scalability.py — while the sparse pattern keeps compute at
+O(active_blocks) instead of O(S^2).
+
+Sharding of the pattern operands inside the shard_map:
+
+* ``block_idx`` / ``buckets`` — replicated (they index k-blocks of the
+  full sequence, which every device holds post-a2a);
+* ``bias_table`` (H, n_buckets) — sharded over heads on the same axis: the
+  a2a hands device i the contiguous head chunk i, which is exactly row
+  chunk i of the table (row-major head order is preserved by the reshape
+  inside the attention fn, MHA and GQA alike).
+"""
+
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.dual_attention import cluster_sparse_attention
+from repro.parallel.ulysses import (_fit_dp, can_ulysses, head_to_seq_a2a,
+                                    seq_to_head_a2a)
+
+
+def can_shard_cluster(n_heads: int, n_kv: int, seq: int, p: int,
+                      bq: int, bk: int) -> bool:
+    """True iff the cluster-sparse path can run sequence-sharded p ways:
+    Ulysses head/seq divisibility plus whole-block coverage of the full
+    sequence (the a2a reassembles the complete sequence on every device,
+    so blocks never straddle shard boundaries — only S itself must tile)."""
+    if not can_ulysses(n_heads, n_kv, seq, p):
+        return False
+    return seq % bq == 0 and seq % bk == 0
+
+
+def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
+                              bias_table=None, *, mesh, axis: str = "model",
+                              dp_axes=("data",), bq: int = 128,
+                              bk: int = 128, causal: bool = False,
+                              row_chunk: int = 8, attn_fn=None):
+    """q: (B, S, H, Dh), k/v: (B, S, KV, Dh) — global arrays, sharded
+    (batch over ``dp_axes``, sequence over ``axis``) by the shard_map
+    in_specs. block_idx: (B, nq, mb) int32; buckets: (B, nq, mb, bq, bk)
+    int8 or None; bias_table: (H, n_buckets) or None.
+
+    ``attn_fn(q, k, v, block_idx, buckets, bias_table)`` runs on
+    full-sequence, head-sharded tensors; default is the jnp blocked-gather
+    oracle (swap in the Pallas cluster kernel on TPU). Returns
+    (B, S, H, Dh) with the input sharding."""
+    p = mesh.shape[axis] if axis in mesh.shape else 1
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+
+    if attn_fn is None:
+        def attn_fn(ql, kl, vl, il, bl, tl):
+            return cluster_sparse_attention(
+                ql, kl, vl, il, bl, tl, bq=bq, bk=bk, causal=causal,
+                row_chunk=row_chunk)
+
+    if p <= 1:
+        return attn_fn(q, k, v, block_idx, buckets, bias_table)
+    if not can_shard_cluster(H, KV, S, p, bq, bk):
+        raise ValueError(
+            f"cluster attention cannot shard: H={H} KV={KV} S={S} "
+            f"bq={bq} bk={bk} over {p}-way axis {axis!r}")
+    r = max(1, -(-p // KV))
+
+    dp = _fit_dp(dp_axes, mesh, B)
+    bspec = dp if dp else None
+    seq_spec = P(bspec, axis, None, None)
+
+    args = [q, k, v, block_idx]
+    # block pattern: batch-sharded with q/k/v (per-graph layouts), pattern
+    # dims replicated — every device holds the full sequence post-a2a
+    specs = [seq_spec, seq_spec, seq_spec, P(bspec, None, None)]
+    if buckets is not None:
+        args.append(buckets)
+        specs.append(P(bspec, *(None,) * 4))
+    if bias_table is not None:
+        args.append(bias_table)
+        specs.append(P(axis, None))
+
+    def inner(ql, kl, vl, il, *rest):
+        rest = list(rest)
+        bl = rest.pop(0) if buckets is not None else None
+        tl = rest.pop(0) if bias_table is not None else None
+        # to head-sharded full sequence: the replicated block pattern
+        # applies as-is on every device
+        ql, kl, vl = seq_to_head_a2a(ql, kl, vl, axis=axis, r=r)
+        ol = attn_fn(ql, kl, vl, il, bl, tl)
+        return head_to_seq_a2a(ol, axis=axis)
+
+    return compat.shard_map(inner, mesh=mesh, in_specs=tuple(specs),
+                            out_specs=seq_spec)(*args)

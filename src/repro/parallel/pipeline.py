@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(stage_fn, stage_params, microbatches, mesh,
                    axis: str = "model"):
@@ -64,8 +66,7 @@ def pipeline_apply(stage_fn, stage_params, microbatches, mesh,
         return outs
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return compat.shard_map(
         inner, mesh=mesh,
         in_specs=(pspec, P()),
-        out_specs=P(),
-        check_vma=False)(stage_params, microbatches)
+        out_specs=P())(stage_params, microbatches)

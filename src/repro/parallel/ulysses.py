@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _fit_dp(dp_axes, mesh, batch: int):
     """Keep only data-parallel axes that divide the batch dim (shard_map
@@ -31,6 +33,28 @@ def _fit_dp(dp_axes, mesh, batch: int):
             out.append(a)
             prod *= mesh.shape[a]
     return tuple(out)
+
+
+def seq_to_head_a2a(ql, kl, vl, *, axis: str, r: int = 1):
+    """Device-local half of the Ulysses sandwich: replicate kv heads r
+    times (GQA), then all-to-all (B, S/P, H, Dh) -> (B, S, H/P, Dh) so
+    each device holds the full sequence for its head chunk. Must run
+    inside a shard_map over ``axis``."""
+    if r > 1:
+        kl = jnp.repeat(kl, r, axis=2)
+        vl = jnp.repeat(vl, r, axis=2)
+
+    def a2a(x):
+        return jax.lax.all_to_all(x, axis, split_axis=2, concat_axis=1,
+                                  tiled=True)
+
+    return a2a(ql), a2a(kl), a2a(vl)
+
+
+def head_to_seq_a2a(ol, *, axis: str):
+    """Inverse sandwich half: (B, S, H/P, Dh) -> (B, S/P, H, Dh)."""
+    return jax.lax.all_to_all(ol, axis, split_axis=1, concat_axis=2,
+                              tiled=True)
 
 
 def can_ulysses(n_heads: int, n_kv: int, seq: int, p: int) -> bool:
@@ -57,23 +81,12 @@ def ulysses_attention(q, k, v, *, mesh, attn_fn, axis: str = "model",
     spec = P(dp if dp else None, axis, None, None)
 
     def inner(ql, kl, vl):
-        if r > 1:
-            kl = jnp.repeat(kl, r, axis=2)
-            vl = jnp.repeat(vl, r, axis=2)
-        # (B, S/P, H, Dh) -> (B, S, H/P, Dh)
-        ql = jax.lax.all_to_all(ql, axis, split_axis=2, concat_axis=1,
-                                tiled=True)
-        kl = jax.lax.all_to_all(kl, axis, split_axis=2, concat_axis=1,
-                                tiled=True)
-        vl = jax.lax.all_to_all(vl, axis, split_axis=2, concat_axis=1,
-                                tiled=True)
+        ql, kl, vl = seq_to_head_a2a(ql, kl, vl, axis=axis, r=r)
         ol = attn_fn(ql, kl, vl)
-        # back: (B, S, H/P, Dh) -> (B, S/P, H, Dh)
-        return jax.lax.all_to_all(ol, axis, split_axis=1, concat_axis=2,
-                                  tiled=True)
+        return head_to_seq_a2a(ol, axis=axis)
 
-    return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
-                         out_specs=spec, check_vma=False)(q, k, v)
+    return compat.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
+                            out_specs=spec)(q, k, v)
 
 
 def seqpar_attention(q, k, v, *, mesh, attn_fn, axis: str = "model",
@@ -97,5 +110,5 @@ def seqpar_attention(q, k, v, *, mesh, attn_fn, axis: str = "model",
         off = jax.lax.axis_index(axis) * ql.shape[1]
         return attn_fn(ql, kf, vf, off)
 
-    return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
-                         out_specs=spec, check_vma=False)(q, k, v)
+    return compat.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
+                            out_specs=spec)(q, k, v)

@@ -16,6 +16,7 @@ Production concerns implemented (and unit-tested at CPU scale):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import signal
 import time
@@ -24,6 +25,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.ckpt.checkpoint import Checkpointer
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.parallel.axes import axis_rules
@@ -89,6 +91,14 @@ class Trainer:
 
         self._step = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
 
+    def _mesh_ctx(self):
+        """Ambient-mesh context for step execution — the distributed trainer
+        runs its jitted step under the run's mesh; single-device runs get a
+        nullcontext."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return compat.use_mesh(self.mesh)
+
     # ------------------------------------------------------------ state
 
     def init_state(self, seed: int = 0):
@@ -128,7 +138,8 @@ class Trainer:
                 t0 = time.perf_counter()
                 batch = {k: jnp.asarray(v)
                          for k, v in self.batch_fn(step).items()}
-                state, metrics = self._step(state, batch)
+                with self._mesh_ctx():
+                    state, metrics = self._step(state, batch)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 dt = time.perf_counter() - t0
                 if step - start >= 2:  # skip compile-dominated warmup steps

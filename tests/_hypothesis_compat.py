@@ -1,0 +1,68 @@
+"""Thin ``hypothesis`` fallback (optional-dependency policy, ROADMAP.md).
+
+When hypothesis is installed, re-exports the real ``given`` / ``settings``
+/ ``strategies``. When it is not, ``@given`` degrades to running the
+property over a fixed, deterministic pseudo-random sample grid (seeded
+rng, capped example count) so the property tests still execute instead of
+erroring at collection. Only the strategy surface test_core.py uses is
+implemented: integers, floats, sampled_from.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper():
+                # zero-arg signature: the drawn params must not look like
+                # pytest fixtures (no functools.wraps — it would copy
+                # __wrapped__ and pytest would introspect fn's signature)
+                n = min(getattr(wrapper, "_max_examples",
+                                _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

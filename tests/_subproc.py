@@ -1,0 +1,25 @@
+"""Shared multi-device subprocess harness for tests.
+
+XLA locks the host device count on first jax init, so multi-device tests
+run their body in a fresh interpreter with
+``--xla_force_host_platform_device_count`` set up front. One copy of the
+env plumbing, used by test_distributed / test_pipeline / test_compat."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_code(code: str, devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout

@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
@@ -10,3 +12,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_runtest_setup(item):
+    """Optional-dependency policy (ROADMAP.md): tests that need an optional
+    package declare it with @pytest.mark.optional_dep("name") and skip
+    cleanly when it's absent, instead of erroring at collection."""
+    for mark in item.iter_markers("optional_dep"):
+        for name in mark.args:
+            pytest.importorskip(name)

@@ -1,10 +1,11 @@
 """TorchGT core: reordering, conditions, reformation, auto-tuner.
-Includes hypothesis property tests on the system invariants."""
+Includes hypothesis property tests on the system invariants (run over a
+fixed seed grid when hypothesis isn't installed — see
+_hypothesis_compat.py)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.auto_tuner import AutoTuner, choose_tpu_tiles
 from repro.core.conditions import check_conditions

@@ -7,28 +7,13 @@ fake CPU devices (XLA_FLAGS must be set before jax initializes), covering:
 * elastic checkpoint restore across different mesh shapes.
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run(code: str):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC
-    env["JAX_PLATFORMS"] = "cpu"
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=600, env=env)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+from _subproc import run_code as _run
 
 
 def test_pjit_train_step_matches_single_device():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import get_smoke_config
         from repro.configs.base import ShapeConfig
         from repro.models import build
@@ -45,13 +30,12 @@ def test_pjit_train_step_matches_single_device():
 
         loss_1dev, _ = jax.jit(model.loss)(params, batch)
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         recipe = recipe_for(ShapeConfig("train", "train", 64, 8), mesh)
         def loss_fn(p, b):
             with axis_rules(recipe, mesh):
                 return model.loss(p, b)
-        with mesh:
+        with compat.use_mesh(mesh):
             loss_dist, _ = jax.jit(loss_fn)(params, batch)
         err = abs(float(loss_1dev) - float(loss_dist))
         assert err < 2e-3, (float(loss_1dev), float(loss_dist))
@@ -63,11 +47,11 @@ def test_pjit_train_step_matches_single_device():
 def test_ulysses_attention_matches_plain():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.models.layers import chunked_attention
         from repro.parallel.ulysses import ulysses_attention, can_ulysses
 
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 8), ("data", "model"))
         B, S, H, KV, Dh = 2, 256, 8, 4, 32
         assert can_ulysses(H, KV, S, 8)
         key = jax.random.PRNGKey(0)
@@ -75,7 +59,7 @@ def test_ulysses_attention_matches_plain():
         k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, Dh))
         v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, Dh))
         ref = chunked_attention(q, k, v, causal=True, chunk_q=64, chunk_k=64)
-        with mesh:
+        with compat.use_mesh(mesh):
             out = jax.jit(lambda a, b, c: ulysses_attention(
                 a, b, c, mesh=mesh,
                 attn_fn=lambda x, y, z: chunked_attention(
@@ -97,21 +81,20 @@ def test_ulysses_attention_matches_plain():
 def test_elastic_checkpoint_restore_across_meshes():
     out = _run("""
         import shutil, jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt.checkpoint import Checkpointer
 
         d = "/tmp/repro_ckpt_elastic"
         shutil.rmtree(d, ignore_errors=True)
         ck = Checkpointer(d)
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh8 = compat.make_mesh((8,), ("data",))
         x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                            NamedSharding(mesh8, P("data", None)))
         tree = {"a": {"w": x}, "step": jnp.int32(7)}
         ck.save(7, tree, blocking=True)
         # restore onto a DIFFERENT mesh (2x4) with different sharding
-        mesh24 = jax.make_mesh((2, 4), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh24 = compat.make_mesh((2, 4), ("data", "model"))
         sh = {"a": {"w": NamedSharding(mesh24, P("model", "data"))},
               "step": NamedSharding(mesh24, P())}
         tree2 = ck.restore(7, shardings=sh)
@@ -126,10 +109,10 @@ def test_elastic_checkpoint_restore_across_meshes():
 def test_compressed_allreduce_int8():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.optim.compress import (make_compressed_grad_fn,
                                           init_residuals)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("data",))
         W = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
         def loss_fn(p, batch):
             pred = batch["x"] @ p["w"]
@@ -141,7 +124,7 @@ def test_compressed_allreduce_int8():
         g_exact = jax.grad(lambda p: loss_fn(p, batch)[0])(params)
         fn = make_compressed_grad_fn(loss_fn, mesh, codec="int8")
         res = init_residuals(params)
-        with mesh:
+        with compat.use_mesh(mesh):
             loss, g_c, res2 = jax.jit(fn)(params, batch, res)
         rel = float(jnp.linalg.norm(g_c["w"] - g_exact["w"])
                     / jnp.linalg.norm(g_exact["w"]))
@@ -156,6 +139,7 @@ def test_compressed_allreduce_int8():
 def test_moe_ep_matches_oracle_under_mesh():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import get_smoke_config
         from repro.configs.base import ShapeConfig
         from repro.models.moe import moe_apply, moe_defs, moe_tokens
@@ -169,13 +153,12 @@ def test_moe_ep_matches_oracle_under_mesh():
         B, S, D = 4, 16, cfg.d_model
         x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D)) * 0.5
         y_ref, _ = moe_tokens(params, cfg, x.reshape(-1, D))
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         recipe = recipe_for(ShapeConfig("t", "train", S, B), mesh)
         def f(p, xx):
             with axis_rules(recipe, mesh):
                 return moe_apply(p, cfg, xx, capacity_factor=8.0)[0]
-        with mesh:
+        with compat.use_mesh(mesh):
             y_ep = jax.jit(f)(params, x)
         err = float(jnp.abs(y_ep.reshape(-1, D) - y_ref).max())
         assert err < 1e-4, err

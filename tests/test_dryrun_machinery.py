@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.launch.hlo_analysis import analyze
 from repro.nn.param import fit_spec
 
@@ -114,14 +115,13 @@ def test_collective_accounting():
     """all_to_all / psum payloads show up with right magnitudes (8 fake
     devices via subprocess in test_distributed; here: shard_map on 1 device
     mesh emits no collectives)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     x = jnp.ones((8, 8))
 
     def f(x):
-        return jax.shard_map(lambda a: jax.lax.psum(a, "data"), mesh=mesh,
-                             in_specs=P(None, None),
-                             out_specs=P(None, None), check_vma=False)(x)
+        return compat.shard_map(lambda a: jax.lax.psum(a, "data"),
+                                mesh=mesh, in_specs=P(None, None),
+                                out_specs=P(None, None))(x)
 
     txt = jax.jit(f).lower(x).compile().as_text()
     res = analyze(txt)

@@ -1,21 +1,18 @@
 """Pipeline parallelism: 4-stage GPipe schedule == sequential apply."""
 
-import os
-import subprocess
-import sys
 import textwrap
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from _subproc import run_code
 
 
 def test_pipeline_matches_sequential():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.parallel.pipeline import pipeline_apply
 
         n_stages, n_micro, mb, d = 4, 6, 8, 16
-        mesh = jax.make_mesh((n_stages,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((n_stages,), ("model",))
         key = jax.random.PRNGKey(0)
         ws = jax.random.normal(key, (n_stages, d, d)) / jnp.sqrt(d)
         xs = jax.random.normal(jax.random.fold_in(key, 1), (n_micro, mb, d))
@@ -23,7 +20,7 @@ def test_pipeline_matches_sequential():
         def stage(w, x):
             return jnp.tanh(x @ w)
 
-        with mesh:
+        with compat.use_mesh(mesh):
             out = jax.jit(lambda w, x: pipeline_apply(stage, w, x, mesh))(
                 ws, xs)
 
@@ -38,11 +35,4 @@ def test_pipeline_matches_sequential():
         assert "collective-permute" in txt
         print("OK", err)
     """)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = SRC
-    env["JAX_PLATFORMS"] = "cpu"
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=600, env=env)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    assert "OK" in r.stdout
+    assert "OK" in run_code(code, devices=4)
