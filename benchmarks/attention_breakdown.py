@@ -1,6 +1,11 @@
 """Paper Fig. 2 + Table II: (a) share of iteration time spent in attention;
 (b) irregular topology-pattern attention backward cost vs dense — the
-motivation for Elastic Computation Reformation."""
+motivation for Elastic Computation Reformation; (c) kernel-in-the-loop:
+the sharded cluster path (4 fake CPU devices) with attn_fn = jnp oracle
+vs attn_fn = Pallas cluster kernel in interpret mode, selected purely via
+REPRO_FORCE_PALLAS_CLUSTER — wall-clock is *not* comparable to TPU (the
+interpreter is slow by design); the point is that the composed
+path runs the kernel and agrees with the oracle."""
 
 from __future__ import annotations
 
@@ -57,6 +62,65 @@ def main(full=False):
     row(f"tab2_bw_topo_S{Sp}", t_topo * 1e6,
         f"dense={t_dense*1e6:.0f}us reform={t_reform*1e6:.0f}us "
         f"reform_speedup={t_topo/t_reform:.2f}x")
+
+    # (c) ref oracle vs interpret-mode Pallas kernel inside the sharded path
+    v = sharded_kernel_compare(p=4)
+    if "ref_us" in v:
+        row("sharded_attn_kernel_P4", v["kernel_us"],
+            f"ref_us={v['ref_us']} maxerr=({v['maxerr_1e9']}e-9) "
+            f"dispatch=REPRO_FORCE_PALLAS_CLUSTER")
+
+
+def sharded_kernel_compare(p: int = 4, *, seq: int = 512, heads: int = 8,
+                           d_head: int = 16, bq: int = 64):
+    """Time sharded_cluster_attention on p fake devices with attn_fn
+    resolved to (a) the jnp oracle and (b) the Pallas kernel in interpret
+    mode — the dispatch env var is the only thing that changes between the
+    two runs. Returns {ref_us, kernel_us, maxerr_1e9} (subprocess: fake
+    device count must be set before jax initializes)."""
+    from benchmarks.scalability import _subprocess
+
+    code = f"""
+        import os, time
+        import jax, jax.numpy as jnp
+        from repro import compat
+        from repro.core.graph import sbm_graph
+        from repro.core.reformation import build_layout
+        from repro.parallel.cluster_parallel import sharded_cluster_attention
+        p, S, H, Dh, bq = {p}, {seq}, {heads}, {d_head}, {bq}
+        mesh = compat.make_mesh((p,), ("model",))
+        g = sbm_graph(S - 12, 4, p_in=0.08, p_out=0.002, seed=0)
+        lay = build_layout(g, bq=bq, bk=bq, k_clusters=4, d_b=8, n_global=1)
+        S = lay.seq_len
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (1, S, H, Dh))
+        bidx = jnp.asarray(lay.block_idx)[None]
+        bkts = jnp.asarray(lay.buckets)[None]
+        bias = jax.random.normal(jax.random.fold_in(key, 1),
+                                 (H, lay.n_buckets)) * 0.2
+
+        def bench(mode):
+            os.environ["REPRO_FORCE_PALLAS_CLUSTER"] = mode
+            fn = jax.jit(lambda *a: sharded_cluster_attention(
+                *a, mesh=mesh, axis="model", dp_axes=(), bq=bq, bk=bq))
+            with compat.use_mesh(mesh):
+                out = fn(q, q, q, bidx, bkts, bias)
+                out.block_until_ready()
+                ts = []
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    fn(q, q, q, bidx, bkts, bias).block_until_ready()
+                    ts.append(time.perf_counter() - t0)
+            return out, min(ts)
+
+        o_ref, t_ref = bench("ref")
+        o_k, t_k = bench("interpret")
+        err = float(jnp.abs(o_ref - o_k).max())
+        print("ref_us", int(t_ref * 1e6))
+        print("kernel_us", int(t_k * 1e6))
+        print("maxerr_1e9", int(err * 1e9))
+    """
+    return _subprocess(code, p)
 
 
 if __name__ == "__main__":

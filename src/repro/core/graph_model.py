@@ -21,11 +21,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.dual_attention import cluster_sparse_attention
 from repro.models import layers as L
 from repro.nn import param as nnp
 from repro.parallel import axes as pax
-from repro.parallel.ulysses import can_ulysses, ulysses_attention
+from repro.parallel.cluster_parallel import (can_shard_cluster,
+                                             sharded_cluster_attention)
 
 F32 = jnp.float32
 PE_DIM = 8
@@ -62,6 +62,12 @@ def graph_defs(cfg):
 
 
 def _graph_attn(p, cfg, h, batch, dense: bool, bias_table):
+    """Sparse steps go through the kernel dispatch layer (kernels/ops.py):
+    oracle on CPU, Pallas cluster kernel on TPU / under REPRO_FORCE_PALLAS.
+    Under a model-axis mesh the sparse path composes with the Ulysses a2a
+    via sharded_cluster_attention, which also head-shards bias_table."""
+    from repro.kernels import ops as kops  # lazy: kops imports model layers
+
     q, k, v = L.project_qkv(p, cfg, h, jnp.arange(h.shape[1]))
     if dense:
         bias = batch.get("dense_bias")
@@ -72,18 +78,24 @@ def _graph_attn(p, cfg, h, batch, dense: bool, bias_table):
         bu = batch.get("buckets")
         bq_ = h.shape[1] // bi.shape[1]
         bk_ = bu.shape[-1] if bu is not None else bq_
-        attn_fn = lambda a, b, c: cluster_sparse_attention(
-            a, b, c, bi, bu, bias_table, bq=bq_, bk=bk_, causal=False)
+        attn_fn = lambda a, b, c: kops.cluster_attention(
+            a, b, c, bi, bu, bias_table, causal=False)
 
     ctx = pax.current()
     if ctx is not None:
         recipe, mesh = ctx
         pm = mesh.shape.get("model", 1)
-        if recipe.ulysses and can_ulysses(cfg.n_heads, cfg.kv_heads,
-                                          h.shape[1] * pm, pm) and not dense:
-            o = ulysses_attention(q, k, v, mesh=mesh, attn_fn=attn_fn,
-                                  dp_axes=("data", "pod"))
+        if recipe.ulysses and not dense and pm > 1 and can_shard_cluster(
+                cfg.n_heads, cfg.kv_heads, h.shape[1], pm, bq_, bk_):
+            o = sharded_cluster_attention(
+                q, k, v, bi, bu, bias_table, mesh=mesh, bq=bq_, bk=bk_,
+                dp_axes=("data", "pod"))
             return L.out_proj(p, o)
+        # non-shardable sparse shapes fall through to the plain dispatch
+        # call below (GSPMD decides the layout). Deliberately NOT a
+        # ulysses_attention with a closed-over pattern: the closure would
+        # replicate bias_table, and cluster_sparse_attention on H/pm local
+        # heads would silently read head-0's rows of the full table.
     return L.out_proj(p, attn_fn(q, k, v))
 
 
@@ -100,9 +112,16 @@ def graph_forward(p, cfg, batch, dense: bool):
         h = h + jnp.einsum("bsk,kd->bsd", batch["lap_pe"].astype(dtype),
                            p["pe_proj"].astype(dtype))
     if cfg.n_global:
-        g = p["global_tok"].astype(dtype)[None]
-        h = jnp.concatenate([jnp.broadcast_to(g, (h.shape[0],) + g.shape[1:]),
-                             h[:, cfg.n_global:]], axis=1)
+        # overwrite the leading n_global positions with the global tokens.
+        # Deliberately NOT a concatenate: concat along the (model-)sharded
+        # sequence dim with unaligned piece boundaries miscompiles under
+        # XLA SPMD on JAX 0.4.x (wrong values, no error); the masked
+        # gather+where form partitions trivially and is numerically
+        # identical.
+        g = p["global_tok"].astype(dtype)
+        pos = jnp.arange(h.shape[1])
+        gseq = jnp.take(g, jnp.minimum(pos, g.shape[0] - 1), axis=0)[None]
+        h = jnp.where((pos < cfg.n_global)[None, :, None], gseq, h)
     h = pax.logical(h, "batch", "seq_outer", "embed")
     bias_table = p.get("bias_table")
 

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the paper's compute hot-spots, plus their jnp
+oracles (ref.py) and the dispatch layer (ops.py).
+
+Call kernels through ``repro.kernels.ops`` — it resolves ref / interpret /
+compiled per op from config and REPRO_FORCE_PALLAS* env vars, checks TPU
+shape legality (padding the lane dim, falling back to the oracle with a
+warning otherwise), and is what parallel/cluster_parallel.py, the models,
+and the trainer are wired through. Import the kernel modules directly only
+to test a kernel body in isolation.
+"""

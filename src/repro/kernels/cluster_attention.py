@@ -102,7 +102,7 @@ def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
                                 preferred_element_type=F32) * sm_scale
         bkt = bkt_ref[0, 0].astype(jnp.int32)          # (bq, bk)
         table = bias_ref[h]                            # (n_buckets,)
-        bias = jnp.take(table, jnp.maximum(bkt, 0), axis=0)
+        bias = jnp.take(table, jnp.maximum(bkt, 0), axis=0, mode="clip")
         s = jnp.where(bkt >= 0, s + bias, NEG_INF)
         m_prev = m_s[...]
         m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))

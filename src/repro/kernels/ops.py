@@ -1,54 +1,292 @@
-"""Jit'd dispatch wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+"""Kernel dispatch layer: one call site per op, three execution paths.
 
-``use_pallas()`` resolves the execution path once per process:
-  - TPU backend      -> compiled Pallas kernels (production path)
-  - CPU/GPU backend  -> jnp oracles (same math; CI / laptop path)
-  - REPRO_FORCE_PALLAS=interpret -> Pallas in interpret mode (kernel-body
-    semantics on CPU; used by the kernel test suite).
+Every attention/SSD call in the codebase goes through this module instead
+of picking an implementation at the call site. Each public op —
+``flash_attention``, ``cluster_attention``, ``ssd`` — resolves an
+*execution mode* at call (trace) time and then either runs the Pallas
+kernel or the pure-jnp oracle with identical semantics:
+
+``ref``
+    The jnp oracle (``kernels/ref.py`` / ``core/dual_attention.py``).
+    Exact same math, no Pallas. Default on CPU/GPU backends.
+``interpret``
+    The Pallas kernel body executed by the Pallas interpreter — kernel
+    semantics (block pipeline, online softmax, scalar prefetch) on any
+    backend. This is how the kernels run in CI and inside the sharded
+    path on the fake-device CPU mesh.
+``compiled``
+    The Pallas kernel compiled for TPU — the production path. Requires a
+    TPU backend; without one the op falls back to ``ref`` with a warning.
+``auto``
+    ``compiled`` on TPU, ``ref`` elsewhere. The default.
+
+Mode resolution, highest priority first:
+
+1. per-op environment override: ``REPRO_FORCE_PALLAS_FLASH`` /
+   ``REPRO_FORCE_PALLAS_CLUSTER`` / ``REPRO_FORCE_PALLAS_SSD``;
+2. process-wide environment override: ``REPRO_FORCE_PALLAS``;
+3. per-op programmatic override: ``set_mode(mode, op)``;
+4. process-wide programmatic override: ``set_mode(mode)`` — this is what
+   ``TrainerConfig.attn_impl`` / ``launch/train.py --attn-impl`` set;
+5. ``auto``.
+
+Environment beats config on purpose: a test or an operator can force a
+path without editing any call site. ``dispatch_table()`` reports the
+effective mode per op for logging.
+
+Legality and fallback policy (never raise, always warn + fall back):
+
+* ``compiled`` without a TPU backend -> ``ref``;
+* cluster block shapes that violate TPU tiling — ``bq``/``bk`` not a
+  multiple of the fp32 sublane (8), or a sequence the block rows don't
+  tile — -> ``ref`` (block sizes are baked into the layout, so they
+  cannot be padded here);
+* ``causal=True`` together with bucket masks -> ``ref`` (the bucketed
+  kernel variant carries masking in the buckets and has no causal path);
+* a head dim that is not lane-aligned (128) is *padded*, not rejected:
+  q/k/v are zero-padded on the lane axis (q pre-scaled so the kernel's
+  softmax scale still equals ``Dh**-0.5``) and the output is sliced back.
+
+Shape contract of ``cluster_attention`` (the sharded path's ``attn_fn``):
+``(q, k, v, block_idx, buckets, bias_table)`` with q ``(B, S, H, Dh)``,
+k/v ``(B, S, KV, Dh)``; ``block_idx`` either ``(nq, mb)`` (one layout
+shared by the batch — LM local+global mode) or ``(B, nq, mb)`` (per-graph
+layouts — the Pallas path loops the kernel over the batch, the ref path
+consumes the batch dim directly). ``buckets`` carries the extra leading
+batch dim iff ``block_idx`` does; ``bias_table`` is ``(H, n_buckets)``
+where ``H`` is the *local* head count — under the sharded path each
+device passes its own head chunk of the table.
 """
 
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.dual_attention import cluster_sparse_attention
 from repro.kernels import cluster_attention as _ca
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
 
+MODES = ("auto", "ref", "interpret", "compiled")
+OPS = ("flash_attention", "cluster_attention", "ssd")
 
-def _mode() -> str:
-    force = os.environ.get("REPRO_FORCE_PALLAS", "")
-    if force:
-        return force  # "interpret" | "compiled" | "ref"
-    return "compiled" if jax.default_backend() == "tpu" else "ref"
+_ENV_GLOBAL = "REPRO_FORCE_PALLAS"
+_ENV_PER_OP = {
+    "flash_attention": "REPRO_FORCE_PALLAS_FLASH",
+    "cluster_attention": "REPRO_FORCE_PALLAS_CLUSTER",
+    "ssd": "REPRO_FORCE_PALLAS_SSD",
+}
 
+LANE = 128     # TPU lane width: the last dim of every VMEM tile
+SUBLANE = 8    # fp32 sublane: granularity of the second-to-last tile dim
+
+_overrides: dict[str, str] = {}   # op name or "*" -> mode
+
+
+def _check_mode(mode: str):
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+
+
+def set_mode(mode: str, op: str | None = None):
+    """Programmatic dispatch override: ``set_mode("interpret")`` routes all
+    ops through the Pallas interpreter; ``set_mode("ref", "ssd")`` pins one
+    op. ``"auto"`` clears the corresponding override. Environment overrides
+    (see module docstring) still take precedence."""
+    _check_mode(mode)
+    if op is not None and op not in OPS:
+        raise ValueError(f"op {op!r} not in {OPS}")
+    key = op or "*"
+    if mode == "auto":
+        _overrides.pop(key, None)
+    else:
+        _overrides[key] = mode
+
+
+def resolve_mode(op: str) -> str:
+    """Effective execution mode for ``op`` right now: first set of per-op
+    env, global env, per-op ``set_mode``, global ``set_mode``; then
+    ``auto`` = compiled-on-TPU / ref-elsewhere."""
+    for mode in (os.environ.get(_ENV_PER_OP[op], ""),
+                 os.environ.get(_ENV_GLOBAL, ""),
+                 _overrides.get(op, ""),
+                 _overrides.get("*", "")):
+        if mode:
+            _check_mode(mode)
+            break
+    else:
+        mode = "auto"
+    if mode == "auto":
+        return "compiled" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+def dispatch_table() -> dict[str, str]:
+    """{op: effective mode} — for launch-time logging and tests."""
+    return {op: resolve_mode(op) for op in OPS}
+
+
+def _fallback(op: str, reason: str):
+    warnings.warn(
+        f"repro.kernels.ops: {op}: falling back to the jnp reference path "
+        f"({reason})", RuntimeWarning, stacklevel=3)
+
+
+def _no_tpu(mode: str) -> str | None:
+    if mode == "compiled" and jax.default_backend() != "tpu":
+        return "mode=compiled but no TPU backend is attached"
+    return None
+
+
+def _pad_lanes(q, k, v):
+    """Zero-pad the head (lane) dim of q/k/v up to a multiple of LANE and
+    return an un-pad function for the output. The kernels derive their
+    softmax scale from the padded Dh, so q is pre-scaled by
+    ``sqrt(Dh_padded / Dh)`` to keep the effective scale at ``Dh**-0.5``;
+    zero lanes contribute nothing to q.k or to the sliced-off output."""
+    dh = q.shape[-1]
+    pad = -dh % LANE
+    if not pad:
+        return q, k, v, lambda o: o
+    q = q * float(((dh + pad) / dh) ** 0.5)
+    width = ((0, 0),) * (q.ndim - 1) + ((0, pad),)
+    return (jnp.pad(q, width), jnp.pad(k, width), jnp.pad(v, width),
+            lambda o: o[..., :dh])
+
+
+# --------------------------------------------------------------- flash
 
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
-    m = _mode()
-    if m == "ref":
+    """Dense flash attention. q ``(B, Sq, H, Dh)``, k/v ``(B, Sk, KV, Dh)``.
+    The Pallas path pads ragged sequence tails and non-lane-aligned head
+    dims itself; only a missing TPU forces the ref fallback."""
+    mode = resolve_mode("flash_attention")
+    reason = _no_tpu(mode)
+    if reason:
+        _fallback("flash_attention", reason)
+        mode = "ref"
+    if mode == "ref":
         return _ref.flash_attention_ref(q, k, v, causal=causal)
-    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                               block_k=block_k,
-                               interpret=(m == "interpret"))
+    q, k, v, unpad = _pad_lanes(q, k, v)
+    return unpad(_fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                     block_k=block_k,
+                                     interpret=(mode == "interpret")))
+
+
+# --------------------------------------------------------------- cluster
+
+def _cluster_illegal(q, block_idx, buckets, causal, mode, want_bq,
+                     want_bk) -> str | None:
+    """Reason the Pallas cluster kernel cannot run this call, or None.
+    Block sizes are baked into the layout (they index the pattern), so
+    violations here fall back to ref rather than padding. The kernel
+    derives bq = S // nq and bk from buckets (= bq without them); caller
+    overrides it cannot honor are rejected so ref and kernel modes never
+    silently compute different things."""
+    reason = _no_tpu(mode)
+    if reason:
+        return reason
+    if block_idx.ndim not in (2, 3):
+        return f"block_idx must be (nq, mb) or (B, nq, mb), got " \
+               f"{block_idx.ndim}-d"
+    S = q.shape[1]
+    nq = block_idx.shape[-2]
+    if S % nq:
+        return f"sequence {S} is not tiled by {nq} q-block rows"
+    bq = S // nq
+    bk = buckets.shape[-1] if buckets is not None else bq
+    if want_bq is not None and want_bq != bq:
+        return f"kernel derives bq={bq} but caller requires bq={want_bq}"
+    if want_bk is not None and want_bk != bk:
+        return f"kernel derives bk={bk} but caller requires bk={want_bk}"
+    if S % bk:
+        return f"sequence {S} is not tiled by k-blocks of {bk}"
+    if bq % SUBLANE or bk % SUBLANE:
+        return f"block shape ({bq}, {bk}) is not sublane-aligned " \
+               f"(multiples of {SUBLANE})"
+    if causal and buckets is not None:
+        return "the bucketed kernel variant has no causal mask"
+    if buckets is not None and buckets.ndim != block_idx.ndim + 2:
+        return f"buckets rank {buckets.ndim} does not match block_idx " \
+               f"rank {block_idx.ndim}"
+    return None
+
+
+def _cluster_ref(q, k, v, block_idx, buckets, bias_table, *, causal,
+                 row_chunk, bq, bk):
+    if block_idx.ndim == 2:
+        block_idx = jnp.broadcast_to(block_idx[None],
+                                     (q.shape[0],) + block_idx.shape)
+        if buckets is not None:
+            buckets = jnp.broadcast_to(buckets[None],
+                                       (q.shape[0],) + buckets.shape)
+    nq = block_idx.shape[1]
+    bq = bq or q.shape[1] // nq
+    bk = bk or (buckets.shape[-1] if buckets is not None else bq)
+    return cluster_sparse_attention(q, k, v, block_idx, buckets, bias_table,
+                                    bq=bq, bk=bk, causal=causal,
+                                    row_chunk=row_chunk)
 
 
 def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
-                      causal=False):
-    m = _mode()
-    if m == "ref":
-        return _ref.cluster_attention_ref(q, k, v, block_idx, buckets,
-                                          bias_table, causal=causal)
-    return _ca.cluster_attention(q, k, v, block_idx, buckets, bias_table,
-                                 causal=causal,
-                                 interpret=(m == "interpret"))
+                      causal=False, row_chunk=8, bq=None, bk=None):
+    """Cluster-sparse attention over a reformation layout — the production
+    ``attn_fn`` of ``parallel/cluster_parallel.py`` (shape contract in the
+    module docstring). ``bq``/``bk`` are only needed when they cannot be
+    implied (``bq = S // nq``, ``bk`` from buckets); ``row_chunk`` tunes
+    the ref path's q-row chunking and is ignored by the kernel."""
+    mode = resolve_mode("cluster_attention")
+    if mode != "ref":
+        reason = _cluster_illegal(q, block_idx, buckets, causal, mode,
+                                  bq, bk)
+        if reason is not None:
+            _fallback("cluster_attention", reason)
+            mode = "ref"
+    if mode == "ref":
+        return _cluster_ref(q, k, v, block_idx, buckets, bias_table,
+                            causal=causal, row_chunk=row_chunk, bq=bq, bk=bk)
 
+    interpret = mode == "interpret"
+    block_idx = block_idx.astype(jnp.int32)
+    if buckets is not None and bias_table is None:
+        # zero bias; 1-wide table (bucket lookups clamp to row 0)
+        bias_table = jnp.zeros((q.shape[2], 1), jnp.float32)
+    q, k, v, unpad = _pad_lanes(q, k, v)
+    if block_idx.ndim == 2:
+        out = _ca.cluster_attention(q, k, v, block_idx, buckets, bias_table,
+                                    causal=causal, interpret=interpret)
+    else:
+        # per-graph layouts: the kernel's scalar-prefetch grid is built for
+        # one layout, so run it per batch element (B is small and static)
+        outs = [
+            _ca.cluster_attention(
+                q[b:b + 1], k[b:b + 1], v[b:b + 1], block_idx[b],
+                None if buckets is None else buckets[b], bias_table,
+                causal=causal, interpret=interpret)
+            for b in range(q.shape[0])
+        ]
+        out = jnp.concatenate(outs, axis=0)
+    return unpad(out)
+
+
+# --------------------------------------------------------------- ssd
 
 def ssd(x, dt, a, b, c, *, chunk=256):
-    m = _mode()
-    if m == "ref":
+    """Mamba2 SSD chunked scan. Falls back to ref when the sequence is not
+    tiled by ``chunk`` or no TPU is attached for ``compiled``."""
+    mode = resolve_mode("ssd")
+    reason = _no_tpu(mode)
+    if reason is None and mode != "ref" and x.shape[1] % chunk:
+        reason = f"sequence {x.shape[1]} is not tiled by chunk {chunk}"
+    if reason:
+        _fallback("ssd", reason)
+        mode = "ref"
+    if mode == "ref":
         return _ref.ssd_ref(x, dt, a, b, c, chunk)
     return _ssd.ssd(x, dt, a, b, c, chunk=chunk,
-                    interpret=(m == "interpret"))
+                    interpret=(mode == "interpret"))

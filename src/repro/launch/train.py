@@ -37,6 +37,10 @@ def main(argv=None):
                     help="model-axis size of the host mesh")
     ap.add_argument("--state-dtype", default="float32",
                     choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "ref", "interpret", "compiled"],
+                    help="kernel dispatch (repro.kernels.ops): auto = "
+                         "Pallas on TPU / jnp oracle elsewhere")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -56,9 +60,12 @@ def main(argv=None):
     tc = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
                        ckpt_dir=args.ckpt_dir, lr=args.lr,
                        warmup=max(2, args.steps // 10),
-                       state_dtype=args.state_dtype)
+                       state_dtype=args.state_dtype,
+                       attn_impl=args.attn_impl)
     trainer = Trainer(model, tc, lambda s: lm_batch(dc, s),
                       mesh=mesh, recipe=recipe)
+    from repro.kernels.ops import dispatch_table
+    print(f"kernel dispatch: {dispatch_table()}")
     state, status = trainer.run()
     for h in trainer.history[:: max(1, len(trainer.history) // 10)]:
         print(f"step {h['step']:4d} loss {h['loss']:.4f} "

@@ -60,22 +60,22 @@ def lm_defs(cfg):
 def _lm_sparse_attn_fn(cfg):
     """TorchGT cluster-sparse backend in its local+global LM form: a static
     (shape-only) layout — sliding window of k-blocks + leading global
-    blocks — runs the same blocked attention as graphs (DESIGN.md §4)."""
-    import numpy as np
-
-    from repro.core.dual_attention import cluster_sparse_attention
+    blocks — runs the same blocked attention as graphs (DESIGN.md §4),
+    through the kernel dispatch layer (kernels/ops.py): jnp oracle on CPU,
+    Pallas cluster kernel on TPU / under REPRO_FORCE_PALLAS. The 2-D
+    (batch-shared) block_idx form keeps the kernel to one pallas_call."""
     from repro.core.reformation import lm_local_global_layout
+    from repro.kernels import ops as kops
 
     def attn(q, k, v):
         S = q.shape[1]
         lay = lm_local_global_layout(S, bq=128, bk=128, window=cfg.window,
                                      n_global=cfg.n_global,
                                      causal=cfg.causal)
-        bi = jnp.broadcast_to(jnp.asarray(lay.block_idx)[None],
-                              (q.shape[0],) + lay.block_idx.shape)
-        return cluster_sparse_attention(q, k, v, bi, None, None,
-                                        bq=lay.bq, bk=lay.bk,
-                                        causal=cfg.causal)
+        bi = jnp.asarray(lay.block_idx)
+        return kops.cluster_attention(q, k, v, bi, None, None,
+                                      causal=cfg.causal,
+                                      bq=lay.bq, bk=lay.bk)
 
     return attn
 

@@ -1,36 +1,57 @@
 """Sharded cluster-sparse attention — Cluster-aware Graph Parallelism
-(paper §III-C) composed with the Dual-interleaved sparse path (§III-B/D).
+(paper §III-C) composed with the Dual-interleaved sparse path (§III-B/D)
+and, by default, with the Elastic Computation Reformation kernel (§III-D):
+all three paper levels execute as one system.
 
 The cluster-reordered graph sequence is sharded over the "model" mesh axis
 between layers (each device holds S/P contiguous graph tokens). Inside
 attention we all-to-all to head-sharded *full*-sequence form — every device
 then sees the whole cluster-reordered sequence for H/P heads, so the
 topology-induced block pattern (ClusterLayout) applies completely
-unchanged: the same ``block_idx`` / ``buckets`` drive the blocked-gather
-oracle (or the Pallas kernel on TPU) that single-device training uses. A
-second all-to-all restores sequence sharding.
+unchanged: the same ``block_idx`` / ``buckets`` drive the per-device
+attention body. A second all-to-all restores sequence sharding.
 
 Per-device a2a volume stays O(S/P) per tensor (4·S·d/P per layer) — the
 §III-C comm-complexity claim, measured from compiled HLO in
 benchmarks/scalability.py — while the sparse pattern keeps compute at
 O(active_blocks) instead of O(S^2).
 
+The attention body — ``attn_fn`` — and kernel dispatch
+------------------------------------------------------
+
+``attn_fn(q, k, v, block_idx, buckets, bias_table)`` runs on the
+full-sequence, head-sharded tensors inside the shard_map. When ``attn_fn``
+is not supplied it defaults to ``repro.kernels.ops.cluster_attention``,
+the dispatch layer: jnp oracle on CPU/GPU, the Pallas cluster kernel on
+TPU, the Pallas interpreter under ``REPRO_FORCE_PALLAS=interpret`` (or
+``REPRO_FORCE_PALLAS_CLUSTER=...`` per-op, or
+``TrainerConfig.attn_impl`` / ``launch/train.py --attn-impl``). No call
+site changes between those paths — the dispatch knob alone selects the
+kernel, including here inside shard_map. Illegal block shapes or a
+missing TPU make the dispatcher fall back to the oracle with a
+RuntimeWarning rather than raise (see kernels/ops.py for the full
+legality/fallback rules).
+
 Sharding of the pattern operands inside the shard_map:
 
-* ``block_idx`` / ``buckets`` — replicated (they index k-blocks of the
-  full sequence, which every device holds post-a2a);
+* ``block_idx`` / ``buckets`` — batch-sharded with q/k/v (per-graph
+  layouts); the pattern dims are replicated, since they index k-blocks of
+  the full sequence, which every device holds post-a2a;
 * ``bias_table`` (H, n_buckets) — sharded over heads on the same axis: the
   a2a hands device i the contiguous head chunk i, which is exactly row
   chunk i of the table (row-major head order is preserved by the reshape
-  inside the attention fn, MHA and GQA alike).
+  inside the attention fn, MHA and GQA alike). Each device therefore
+  passes its *local* (H/P, n_buckets) chunk to ``attn_fn`` — exactly the
+  head-local table the kernel and the oracle both expect.
 """
 
 from __future__ import annotations
 
+import functools
+
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.dual_attention import cluster_sparse_attention
 from repro.parallel.ulysses import (_fit_dp, can_ulysses, head_to_seq_a2a,
                                     seq_to_head_a2a)
 
@@ -46,6 +67,17 @@ def can_shard_cluster(n_heads: int, n_kv: int, seq: int, p: int,
     return seq % bq == 0 and seq % bk == 0
 
 
+def _default_attn_fn(causal: bool, row_chunk: int, bq: int, bk: int):
+    """Kernel-dispatched attention body (lazy import: kernels.ops pulls in
+    model layers, which import this package). bq/bk are forwarded so the
+    ref path honors a caller-specified bk != bq (buckets absent); the
+    kernel path falls back with a warning if it cannot."""
+    from repro.kernels import ops as kops
+
+    return functools.partial(kops.cluster_attention, causal=causal,
+                             row_chunk=row_chunk, bq=bq, bk=bk)
+
+
 def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
                               bias_table=None, *, mesh, axis: str = "model",
                               dp_axes=("data",), bq: int = 128,
@@ -57,18 +89,22 @@ def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
     int8 or None; bias_table: (H, n_buckets) or None.
 
     ``attn_fn(q, k, v, block_idx, buckets, bias_table)`` runs on
-    full-sequence, head-sharded tensors; default is the jnp blocked-gather
-    oracle (swap in the Pallas cluster kernel on TPU). Returns
-    (B, S, H, Dh) with the input sharding."""
+    full-sequence, head-sharded tensors; default is the kernel dispatch
+    layer ``repro.kernels.ops.cluster_attention`` (jnp oracle on CPU, the
+    Pallas cluster kernel on TPU / under ``REPRO_FORCE_PALLAS`` — see the
+    module docstring). ``row_chunk`` tunes the oracle's q-row chunking and
+    is ignored by the kernel. Returns (B, S, H, Dh) with the input
+    sharding.
+
+    Falls through to a direct ``attn_fn`` call when the axis is absent or
+    size 1; raises ValueError when the shapes cannot shard p ways (use
+    ``can_shard_cluster`` to pre-check)."""
     p = mesh.shape[axis] if axis in mesh.shape else 1
     B, S, H, Dh = q.shape
     KV = k.shape[2]
 
     if attn_fn is None:
-        def attn_fn(ql, kl, vl, il, bl, tl):
-            return cluster_sparse_attention(
-                ql, kl, vl, il, bl, tl, bq=bq, bk=bk, causal=causal,
-                row_chunk=row_chunk)
+        attn_fn = _default_attn_fn(causal, row_chunk, bq, bk)
 
     if p <= 1:
         return attn_fn(q, k, v, block_idx, buckets, bias_table)

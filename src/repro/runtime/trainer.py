@@ -11,7 +11,10 @@ Production concerns implemented (and unit-tested at CPU scale):
   `straggler_factor` x EMA are flagged and the policy callback fires (at
   real scale: re-dispatch / hot-spare swap; here: recorded + surfaced);
 * elastic restart: checkpoints restore onto a different mesh (shardings
-  come from the current run's recipe, not the saved one).
+  come from the current run's recipe, not the saved one);
+* kernel dispatch: ``TrainerConfig.attn_impl`` routes every attention/SSD
+  op in the jitted step through repro.kernels.ops (oracle / Pallas
+  interpret / Pallas compiled) — no call-site edits anywhere in the model.
 """
 
 from __future__ import annotations
@@ -27,6 +30,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.ckpt.checkpoint import Checkpointer
+from repro.kernels import ops as kernel_ops
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.parallel.axes import axis_rules
 
@@ -44,6 +48,10 @@ class TrainerConfig:
     straggler_factor: float = 3.0
     fail_at_step: int = -1          # failure injection (tests)
     log_every: int = 10
+    # kernel dispatch for every attention/SSD op in the step (kernels/ops):
+    # auto = Pallas-compiled on TPU / jnp oracle elsewhere; ref / interpret /
+    # compiled force a path. REPRO_FORCE_PALLAS* env vars still win.
+    attn_impl: str = "auto"
 
 
 @dataclasses.dataclass
@@ -61,6 +69,10 @@ class Trainer:
         self.batch_fn = batch_fn
         self.mesh = mesh
         self.recipe = recipe
+        # route every kernel call in the jitted step through the dispatch
+        # layer: one config knob selects oracle / interpret / compiled
+        # everywhere, including inside shard_map (kernels/ops.py)
+        kernel_ops.set_mode(cfg.attn_impl)
         self.ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.keep)
         self.opt = AdamW(
             lr=warmup_cosine(cfg.lr, cfg.warmup, cfg.steps),
