@@ -21,7 +21,8 @@ def main(full=False):
             f"test_acc={acc:.3f} "
             f"density={bench.prep.layout.density():.4f} "
             f"transferred={bench.prep.layout.stats['clusters_transferred']}")
-    # Auto Tuner trajectory on the LDR signal
+    # Auto Tuner trajectory on the LDR signal (offline replay: the tuner
+    # is fed a frozen run's losses, the layout never actually changes)
     tuner = AutoTuner(beta_g=bg, delta=5)
     bench = GraphTrainBench(arch="graphormer_slim", n=512,
                             beta_thre=tuner.beta_thre)
@@ -32,6 +33,39 @@ def main(full=False):
     row("tab8_autotuner", t_epoch * 1e6,
         f"test_acc={acc:.3f} beta_path={path[0]:.4f}->{path[-1]:.4f} "
         f"steps_up={sum(1 for a, b in zip(path, path[1:]) if b > a)}")
+    trainer_elastic(epochs)
+
+
+def trainer_elastic(epochs):
+    """Trainer-integrated elastic trajectory: ladder moves actually swap
+    the reformed layout the sparse step trains on (not a replay) — the
+    per-move LDR and the density of the rung each move lands on."""
+    import tempfile
+
+    from repro.configs import get_smoke_config
+    from repro.core.graph import sbm_graph
+    from repro.models import build
+    from repro.runtime.elastic import ElasticGraphTask
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke_config("graphormer_slim")
+    g = sbm_graph(512, 4, p_in=0.04, p_out=0.002, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    task = ElasticGraphTask(g, cfg, delta=5)
+    tc = TrainerConfig(steps=epochs, ckpt_every=10 ** 6, lr=2e-3, warmup=2,
+                       ckpt_dir=tempfile.mkdtemp(prefix="torchgt_beta_"),
+                       interleave_period=cfg.interleave_period,
+                       elastic_every=1)
+    tr = Trainer(build(cfg), tc, elastic=task)
+    tr.run()
+    import numpy as np
+    t_epoch = float(np.median([h["seconds"] for h in tr.history[2:]]))
+    betas = [task.tuner.ladder[1]] + [m.beta_thre for m in task.moves]
+    row("tab8_autotuner_trainer", t_epoch * 1e6,
+        f"loss={tr.history[-1]['loss']:.3f} "
+        f"beta_path={betas[0]:.4f}->{betas[-1]:.4f} "
+        f"ladder_moves={len(task.moves)} "
+        f"density_end={task.layout.density():.4f}")
 
 
 if __name__ == "__main__":

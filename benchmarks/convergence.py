@@ -10,6 +10,41 @@ import os
 from benchmarks.common import GraphTrainBench, row
 
 
+def trainer_elastic(full=False):
+    """Trainer-integrated elastic mode: the AutoTuner moves the beta_thre
+    ladder from *inside* Trainer.run (LDR on real epoch losses), the
+    interleave schedule selects the dense jitted step, and both jitted
+    steps are traced exactly once across every re-layout."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core.graph import sbm_graph
+    from repro.models import build
+    from repro.runtime.elastic import ElasticGraphTask
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    steps = 80 if not full else 160
+    cfg = get_smoke_config("graphormer_slim")
+    g = sbm_graph(768, 4, p_in=0.04, p_out=0.002, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    task = ElasticGraphTask(g, cfg, delta=5)
+    tc = TrainerConfig(steps=steps, ckpt_every=10 ** 6, lr=2e-3, warmup=2,
+                       ckpt_dir=tempfile.mkdtemp(prefix="torchgt_conv_"),
+                       interleave_period=cfg.interleave_period,
+                       elastic_every=1)
+    tr = Trainer(build(cfg), tc, elastic=task)
+    tr.run()
+    t_epoch = float(np.median([h["seconds"] for h in tr.history[2:]]))
+    dense_n = sum(1 for h in tr.history if h["dense"])
+    row("fig10_trainer_elastic", t_epoch * 1e6,
+        f"loss={tr.history[-1]['loss']:.3f} acc={tr.history[-1]['acc']:.3f} "
+        f"ladder_moves={len(task.moves)} dense_steps={dense_n} "
+        f"beta_end={task.beta_thre:.4f} "
+        f"traces={tr._step._cache_size()}+{tr._step_dense._cache_size()}")
+
+
 def main(full=False):
     epochs = 80 if not full else 160
     bench = GraphTrainBench(arch="graphormer_slim", n=768)
@@ -29,6 +64,7 @@ def main(full=False):
     d, s, t = (out[m]["test_acc"] for m in ("raw", "sparse", "torchgt"))
     row("fig10_claim_interleaved_vs_sparse", 0.0,
         f"torchgt-sparse={t - s:+.3f} torchgt-dense={t - d:+.3f}")
+    trainer_elastic(full)
 
 
 if __name__ == "__main__":

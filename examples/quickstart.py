@@ -1,27 +1,27 @@
 """Quickstart: TorchGT in ~60 lines.
 
-Builds a clustered synthetic graph, runs the full TorchGT pipeline
+Builds a clustered synthetic graph and runs the full TorchGT elastic loop
 (cluster reorder -> C1-C3 condition check -> elastic reformation ->
-dual-interleaved attention training) and prints test accuracy.
+AutoTuner-driven re-layout -> dual-interleaved attention) through the
+fault-tolerant Trainer, printing test accuracy and the ladder trajectory.
+The [dense]/[sparse] labels are the steps the trainer actually ran: the
+interleave schedule selects between the two jitted steps per step.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
 from repro.configs import get_smoke_config  # noqa: E402
-from repro.core.dual_attention import use_dense_step  # noqa: E402
 from repro.core.graph import sbm_graph  # noqa: E402
-from repro.data.graph_pipeline import prepare_node_task  # noqa: E402
 from repro.models import build  # noqa: E402
-from repro.optim.adamw import AdamW  # noqa: E402
+from repro.runtime.elastic import ElasticGraphTask  # noqa: E402
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: E402
 
 
 def main():
@@ -30,9 +30,11 @@ def main():
                   n_classes=cfg.n_classes, seed=0)
     print(f"graph: {g.n} nodes, {g.e} edges, sparsity beta_G={g.sparsity:.4f}")
 
-    prep = prepare_node_task(g, cfg, bq=32, bk=32, d_b=8)
+    task = ElasticGraphTask(g, cfg, delta=5)
+    prep = task.prep
     print(f"cluster reorder: cut_ratio={prep.cut:.3f} "
-          f"(prep {prep.prep_seconds*1e3:.0f} ms)")
+          f"(ladder prep {task.prep_seconds*1e3:.0f} ms, "
+          f"mb capacity {task.mb_cap})")
     print(f"conditions C1/C2/C3: {prep.report.c1_self_loops}/"
           f"{prep.report.c2_hamiltonian}/{prep.report.c3_reachable} "
           f"(diameter~{prep.report.est_diameter})")
@@ -40,26 +42,24 @@ def main():
           f"clusters transferred, attention density "
           f"{prep.layout.density():.3f} (vs 1.0 dense)")
 
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    opt = AdamW(lr=2e-3)
-    ost = opt.init(params)
-    batch = {k: jnp.asarray(v) for k, v in prep.batch.items()}
+    tc = TrainerConfig(steps=40, ckpt_every=1000, lr=2e-3, warmup=2,
+                       ckpt_dir=tempfile.mkdtemp(prefix="torchgt_quick_"),
+                       interleave_period=cfg.interleave_period,
+                       elastic_every=5)
+    trainer = Trainer(build(cfg), tc, elastic=task)
+    state, status = trainer.run()
 
-    @jax.jit
-    def step(p, o, b):
-        (loss, m), grads = jax.value_and_grad(model.loss, has_aux=True)(p, b)
-        new_p, new_o = opt.update(grads, o, p)
-        return loss, m["acc"], new_p, new_o
-
-    for epoch in range(40):
-        dense = use_dense_step(epoch, cfg.interleave_period, prep.report.ok)
-        loss, acc, params, ost = step(params, ost, batch)
-        if epoch % 10 == 0 or epoch == 39:
-            mode = "dense" if dense else "sparse"
-            print(f"epoch {epoch:3d} [{mode:6s}] loss={float(loss):.4f} "
-                  f"acc={float(acc):.3f}")
-    print("done.")
+    for h in trainer.history:
+        ep = h["step"] - 1
+        if ep % 10 == 0 or ep == tc.steps - 1:
+            mode = "dense" if h["dense"] else "sparse"
+            print(f"epoch {ep:3d} [{mode:6s}] loss={h['loss']:.4f} "
+                  f"acc={h['acc']:.3f} beta_thre={h['beta_thre']:.4f}")
+    for m in task.moves:
+        print(f"  ladder move @ step {m.step}: beta_thre -> "
+              f"{m.beta_thre:.4f}")
+    print(f"done ({status}): {len(task.moves)} ladder moves, "
+          f"{sum(1 for h in trainer.history if h['dense'])} dense steps.")
 
 
 if __name__ == "__main__":

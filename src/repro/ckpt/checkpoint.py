@@ -101,7 +101,11 @@ class Checkpointer:
 
     # ------------------------------------------------------------ save
 
-    def save(self, step: int, tree, *, blocking: bool = False):
+    def save(self, step: int, tree, *, blocking: bool = False,
+             extra: dict | None = None):
+        """``extra`` is a JSON-safe dict stored verbatim in the manifest —
+        the elastic trainer keeps its AutoTuner/layout state there so a
+        restart resumes the ladder (read back via ``load_extra``)."""
         self.wait()
         flat = _flatten(tree)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
@@ -114,6 +118,8 @@ class Checkpointer:
             shutil.rmtree(tmp, ignore_errors=True)
             os.makedirs(tmp)
             manifest = {"step": step, "codec": codec, "leaves": {}}
+            if extra is not None:
+                manifest["extra"] = extra
             for i, (k, v) in enumerate(host.items()):
                 fn = f"leaf_{i:05d}.npy.{codec}"
                 with open(os.path.join(tmp, fn), "wb") as f:
@@ -158,6 +164,12 @@ class Checkpointer:
     def latest_step(self):
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load_extra(self, step: int) -> dict | None:
+        """The manifest's ``extra`` metadata dict (None if absent)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f).get("extra")
 
     def restore(self, step: int, *, shardings=None, abstract=None):
         """shardings: optional pytree of jax.sharding.Sharding (elastic

@@ -60,6 +60,7 @@ class ModelConfig:
     max_degree: int = 512
     max_spd: int = 16
     interleave_period: int = 0       # dense-attention interleave cadence
+    elastic_every: int = 0           # steps per AutoTuner epoch (0 = frozen)
     # --- numerics / perf knobs ---
     dtype: str = "bfloat16"
     remat: str = "block"             # none | block | full

@@ -20,6 +20,7 @@ CONFIG = ModelConfig(
     causal=False,
     attn_backend="cluster_sparse",
     interleave_period=8,
+    elastic_every=1,
     n_global=1,
     rope_theta=0.0,
 )

@@ -24,6 +24,7 @@ CONFIG = ModelConfig(
     causal=False,
     attn_backend="cluster_sparse",
     interleave_period=8,    # dense attention every 8 steps (paper §III-B)
+    elastic_every=1,        # full-graph task: 1 step = 1 epoch (§III-D)
     n_global=1,             # [graph] global token
     rope_theta=0.0,
 )

@@ -38,6 +38,30 @@ class AutoTuner:
     def beta_thre(self) -> float:
         return self._ladder[self._pos]
 
+    @property
+    def ladder(self) -> tuple:
+        return self._ladder
+
+    @property
+    def pos(self) -> int:
+        return self._pos
+
+    def state_dict(self) -> dict:
+        """JSON-safe tuner state for the checkpoint manifest: ladder
+        position plus the EMA/LDR tails ``update`` actually reads — an
+        elastic restart resumes the ladder instead of resetting it."""
+        return {"pos": int(self._pos),
+                "beta_g": float(self.beta_g),
+                "ladder": [float(x) for x in self._ladder],
+                "f": [float(x) for x in self._f[-1:]],
+                "ldr": [float(x) for x in self._ldr[-(self.delta + 1):]]}
+
+    def load_state_dict(self, d: dict) -> None:
+        self._ladder = tuple(float(x) for x in d["ladder"])
+        self._pos = int(d["pos"])
+        self._f = [float(x) for x in d["f"]]
+        self._ldr = [float(x) for x in d["ldr"]]
+
     def update(self, loss: float, epoch_time: float) -> float:
         """Feed one epoch's (loss, wall time); returns the new beta_thre."""
         f_prev = self._f[-1] if self._f else loss

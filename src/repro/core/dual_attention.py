@@ -120,16 +120,28 @@ def dense_buckets_from_layout(layout):
     return out
 
 
+def dense_bias_from_buckets(dense_buckets, bias_table, n_heads: int):
+    """(S, S) or (B, S, S) int8 bucket matrix -> (B, H, S, S) additive
+    bias for the dense interleave step: structural bias kept where the
+    sparse pattern defines it, zero elsewhere (fully-connected attention).
+    jit-safe both ways: ``bias_table`` may be a traced parameter and
+    ``dense_buckets`` is an *array input*, so elastic re-layout swaps its
+    contents without retracing the dense step."""
+    bk = jnp.asarray(dense_buckets)
+    if bk.ndim == 2:
+        bk = bk[None]
+    if bias_table is None:
+        return jnp.zeros((bk.shape[0], n_heads) + bk.shape[1:], F32)
+    idx = jnp.maximum(bk, 0).astype(jnp.int32)
+    vals = jnp.take(bias_table.astype(F32), idx, axis=1)    # (H, B, S, S)
+    vals = jnp.moveaxis(vals, 0, 1)                         # (B, H, S, S)
+    return jnp.where((bk >= 0)[:, None], vals, 0.0)
+
+
 def dense_bias_from_layout(layout, bias_table, n_heads: int):
-    """(1, H, S, S) additive bias for the dense interleave step on small
-    graphs: structural bias kept where the pattern defines it, zero
-    elsewhere (fully-connected attention). jit-safe: bias_table may be a
-    traced parameter."""
-    import numpy as np
+    """(1, H, S, S) additive bias from a host-side ClusterLayout (see
+    dense_bias_from_buckets for the array-input form)."""
     bk = dense_buckets_from_layout(layout)                  # np (S,S) int8
     if bias_table is None or layout.buckets is None:
         return jnp.zeros((1, n_heads) + bk.shape, F32)
-    bki = jnp.asarray(np.maximum(bk, 0), jnp.int32)
-    vals = jnp.take(bias_table.astype(F32), bki, axis=1)    # (H, S, S)
-    bias = jnp.where(jnp.asarray(bk >= 0)[None], vals, 0.0)
-    return bias[None]
+    return dense_bias_from_buckets(bk, bias_table, n_heads)

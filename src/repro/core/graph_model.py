@@ -32,7 +32,8 @@ PE_DIM = 8
 
 
 def _n_buckets(cfg) -> int:
-    return (cfg.max_spd + 1) if cfg.graph_bias == "spd" else 3
+    # SPD: hop counts 0..max_spd + the global-token virtual-distance bucket
+    return (cfg.max_spd + 2) if cfg.graph_bias == "spd" else 3
 
 
 def graph_defs(cfg):
@@ -154,6 +155,21 @@ def graph_loss(p, cfg, batch, dense: bool = False):
     return loss, {"xent": loss, "acc": acc}
 
 
+def graph_loss_dense(p, cfg, batch):
+    """Dense interleave step (§III-B): fully-connected attention, biased
+    where the sparse pattern defines structure. The bias is built inside
+    the trace from the ``dense_buckets`` batch array — data, not a static
+    constant — so elastic re-layout never retraces this step."""
+    from repro.core.dual_attention import dense_bias_from_buckets
+
+    b = dict(batch)
+    if "dense_bias" not in b and b.get("dense_buckets") is not None \
+            and p.get("bias_table") is not None:
+        b["dense_bias"] = dense_bias_from_buckets(
+            b["dense_buckets"], p["bias_table"], cfg.n_heads)
+    return graph_loss(p, cfg, b, dense=True)
+
+
 def graph_predict(p, cfg, batch, dense: bool = False):
     h = graph_forward(p, cfg, batch, dense)
     return jnp.einsum("bsd,dc->bsc", h, p["head"].astype(h.dtype))
@@ -169,4 +185,5 @@ def build_graph_model(cfg):
         prefill=lambda p, b: (graph_predict(p, cfg, b), {}),
         decode=None,  # graph transformers have no autoregressive decode
         cache_defs=None,
+        loss_dense=lambda p, b: graph_loss_dense(p, cfg, b),
     )

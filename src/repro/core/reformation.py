@@ -18,7 +18,10 @@ The layout feeds both the jnp blocked attention (core/dual_attention.py)
 and the Pallas cluster kernel (kernels/cluster_attention.py).
 
 Bias buckets (int8): -1 masked, 0 self, 1 real edge, 2 reform-fill; in SPD
-mode buckets 0..max_spd are shortest-path distances (computed separately).
+mode buckets 0..max_spd are shortest-path distances (computed separately)
+and bucket max_spd+1 is the virtual distance of any pair involving a
+global token (Graphormer's virtual-node bias) — the SPD matrix is indexed
+in *node* space, so augmented positions are shifted back by n_global.
 """
 
 from __future__ import annotations
@@ -187,9 +190,16 @@ def build_layout(g: Graph, *, bq: int = 128, bk: int = 128,
         m_of[rows_i[sel], cols_j[sel]] = np.tile(np.arange(mb), nq)[sel]
         # exact edges
         if spd is not None:
-            vals = np.minimum(spd[np.minimum(kept_r, S0 - 1),
-                                  np.minimum(kept_c, S0 - 1)],
-                              max_spd).astype(np.int8)
+            # spd is (N, N) in node space; positions carry n_global
+            # prepended global tokens, so node rows sit at p - n_global.
+            N = spd.shape[0]
+            nr = np.clip(kept_r - n_global, 0, N - 1)
+            nc = np.clip(kept_c - n_global, 0, N - 1)
+            vals = np.minimum(spd[nr, nc], max_spd).astype(np.int8)
+            glob = (kept_r < n_global) | (kept_c < n_global)
+            vals = np.where(glob, np.int8(max_spd + 1), vals)
+            vals = np.where(glob & (kept_r == kept_c),
+                            np.int8(BUCKET_SELF), vals).astype(np.int8)
         else:
             vals = np.where(kept_r == kept_c, BUCKET_SELF,
                             BUCKET_EDGE).astype(np.int8)
@@ -223,7 +233,8 @@ def build_layout(g: Graph, *, bq: int = 128, bk: int = 128,
             bucket_arr[bi_t, mi_t, rr, cc] = np.where(
                 cur == BUCKET_MASKED, BUCKET_FILL, cur)
 
-    n_buckets = (max_spd + 1) if spd is not None else N_BUCKETS_ADJ
+    # SPD: distances 0..max_spd plus the global-pair virtual bucket
+    n_buckets = (max_spd + 2) if spd is not None else N_BUCKETS_ADJ
     active_blocks = int((block_idx >= 0).sum())
     stats = {
         "beta_g": beta_g,

@@ -17,7 +17,8 @@ from repro.core.auto_tuner import choose_cluster_dim
 from repro.core.conditions import ConditionReport, check_conditions
 from repro.core.encodings import degree_clip, lap_pe, spd_matrix
 from repro.core.graph import Graph
-from repro.core.reformation import ClusterLayout, build_layout
+from repro.core.reformation import (BUCKET_MASKED, ClusterLayout,
+                                    augment_edges, build_layout)
 from repro.core.reorder import cluster_reorder, cut_ratio
 
 
@@ -35,9 +36,40 @@ def prepare_node_task(g: Graph, cfg, *, beta_thre: float | None = None,
                       k_clusters: int | None = None,
                       train_mask: np.ndarray | None = None,
                       with_buckets: bool = True,
+                      with_dense_buckets: bool = False,
+                      mb_pad: int | None = None,
                       seed: int = 0) -> PreparedGraph:
     """Single-graph node classification: one sequence of all nodes
-    (B=1), global tokens prepended."""
+    (B=1), global tokens prepended.
+
+    ``mb_pad`` pads the layout's selected-k-block axis to a fixed capacity
+    (see :func:`pad_layout_mb`) so elastic re-layout at a different
+    ``beta_thre`` keeps every batch array shape-identical.
+    ``with_dense_buckets`` adds the scattered (1, S, S) int8 bucket matrix
+    the dense interleave step biases with."""
+    prep = prepare_node_task_ladder(
+        g, cfg, [beta_thre], bq=bq, bk=bk, d_b=d_b, k_clusters=k_clusters,
+        train_mask=train_mask, with_buckets=with_buckets,
+        with_dense_buckets=with_dense_buckets, seed=seed)[0]
+    if mb_pad is not None:
+        prep = pad_layout_mb(prep, mb_pad)
+    return prep
+
+
+def prepare_node_task_ladder(g: Graph, cfg, beta_thres,
+                             *, bq: int = 128, bk: int = 128,
+                             d_b: int = 16, k_clusters: int | None = None,
+                             train_mask: np.ndarray | None = None,
+                             with_buckets: bool = True,
+                             with_dense_buckets: bool = False,
+                             seed: int = 0) -> list[PreparedGraph]:
+    """One PreparedGraph per ``beta_thre`` in ``beta_thres``, sharing all
+    rung-invariant work — cluster reorder, condition check, SPD/LapPE
+    encodings and the feature/degree/label arrays — so probing the whole
+    AutoTuner ladder costs one prep plus a layout per rung (only
+    ``block_idx``/``buckets``/``dense_buckets`` depend on the threshold).
+    The shared batch arrays are aliased across rungs (treat as
+    read-only)."""
     t0 = time.perf_counter()
     while bq > 8 and (g.n + cfg.n_global) < 4 * bq:
         bq //= 2
@@ -47,20 +79,20 @@ def prepare_node_task(g: Graph, cfg, *, beta_thre: float | None = None,
     gp = g.permuted(perm)
     # conditions are checked on the AUGMENTED pattern the layout actually
     # uses (self loops C1, chain C2, global-token edges C3)
-    from repro.core.reformation import augment_edges
     ar, ac, s0 = augment_edges(gp, cfg.n_global, chain=True)
     gaug = Graph(s0, ar.astype(np.int32), ac.astype(np.int32))
     report = check_conditions(gaug, cfg.n_layers)
 
     spd = None
     if cfg.graph_bias == "spd":
-        spd = spd_matrix(gc, cfg.max_spd)
-    layout = build_layout(
+        spd = spd_matrix(gp.with_self_loops(), cfg.max_spd)
+    layouts = [build_layout(
         gp, bq=bq, bk=bk, k_clusters=k_clusters, d_b=d_b,
-        beta_thre=beta_thre, n_global=cfg.n_global, chain=True,
+        beta_thre=bt, n_global=cfg.n_global, chain=True,
         buckets=with_buckets, spd=spd, max_spd=cfg.max_spd)
+        for bt in beta_thres]
 
-    S = layout.seq_len
+    S = layouts[0].seq_len
     ng = cfg.n_global
     feat = np.zeros((1, S, cfg.feat_dim), np.float32)
     feat[0, ng:ng + g.n] = gp.feat
@@ -75,23 +107,62 @@ def prepare_node_task(g: Graph, cfg, *, beta_thre: float | None = None,
         tm = train_mask[perm]
         lab = np.where(tm, lab, -1)
     labels[0, ng:ng + g.n] = lab
-
-    batch = {
-        "feat": feat,
-        "in_deg": in_deg,
-        "out_deg": out_deg,
-        "labels": labels,
-        "block_idx": layout.block_idx[None],
-    }
-    if layout.buckets is not None:
-        batch["buckets"] = layout.buckets[None]
+    pe = None
     if cfg.name.startswith("gt"):
         pe = np.zeros((1, S, 8), np.float32)
         pe[0, ng:ng + g.n] = lap_pe(gp)
-        batch["lap_pe"] = pe
     cut = cut_ratio(gp, assign[perm])
-    return PreparedGraph(batch, layout, report, cut,
-                         time.perf_counter() - t0)
+
+    out = []
+    t_prev = t0
+    for layout in layouts:
+        batch = {
+            "feat": feat,
+            "in_deg": in_deg,
+            "out_deg": out_deg,
+            "labels": labels,
+            "block_idx": layout.block_idx[None],
+        }
+        if layout.buckets is not None:
+            batch["buckets"] = layout.buckets[None]
+        if pe is not None:
+            batch["lap_pe"] = pe
+        if with_dense_buckets:
+            from repro.core.dual_attention import dense_buckets_from_layout
+            batch["dense_buckets"] = dense_buckets_from_layout(layout)[None]
+        now = time.perf_counter()
+        out.append(PreparedGraph(batch, layout, report, cut, now - t_prev))
+        t_prev = now
+    return out
+
+
+def pad_layout_mb(prep: PreparedGraph, mb: int) -> PreparedGraph:
+    """Pad the mb (selected-k-block) axis of ``block_idx``/``buckets`` to a
+    fixed per-run capacity. Padding slots are -1 / BUCKET_MASKED, i.e.
+    fully masked — numerically a no-op. The elastic trainer pads every
+    ladder rung's layout to the max mb across the ladder so re-layout
+    changes array *contents*, never shapes (zero retraces)."""
+    lay = prep.layout
+    if mb < lay.mb:
+        raise ValueError(f"mb_pad {mb} < layout mb {lay.mb}")
+    if mb == lay.mb:
+        return prep
+    extra = mb - lay.mb
+    block_idx = np.pad(lay.block_idx, ((0, 0), (0, extra)),
+                       constant_values=-1)
+    buckets = None
+    if lay.buckets is not None:
+        buckets = np.pad(lay.buckets,
+                         ((0, 0), (0, extra), (0, 0), (0, 0)),
+                         constant_values=BUCKET_MASKED)
+    batch = dict(prep.batch)
+    batch["block_idx"] = block_idx[None]
+    if buckets is not None and "buckets" in batch:
+        batch["buckets"] = buckets[None]
+    layout = ClusterLayout(lay.seq_len, lay.bq, lay.bk, block_idx, buckets,
+                           lay.n_buckets, lay.stats)
+    return PreparedGraph(batch, layout, prep.report, prep.cut,
+                         prep.prep_seconds)
 
 
 def prepare_graph_task(graphs: list[Graph], cfg, *, bq: int = 32,
@@ -99,14 +170,22 @@ def prepare_graph_task(graphs: list[Graph], cfg, *, bq: int = 32,
                        beta_thre: float | None = None,
                        seed: int = 0) -> PreparedGraph:
     """Graph-level classification: each sequence is one (small) graph,
-    label sits on the global token (position 0)."""
+    label sits on the global token (position 0). Stats, cut ratio and the
+    condition report are aggregated over the whole batch, not read off
+    graph 0."""
     t0 = time.perf_counter()
-    smax = max(gr.n for gr in graphs) + cfg.n_global
     prepared = []
+    cuts = []
+    reports = []
     for gr in graphs:
         k = max(1, min(4, gr.n // (2 * bq) or 1))
         perm, assign = cluster_reorder(gr, k, seed=seed)
         gp = gr.permuted(perm)
+        cuts.append(cut_ratio(gp, assign[perm]))
+        ar, ac, s0 = augment_edges(gp, cfg.n_global, chain=True)
+        reports.append(check_conditions(
+            Graph(s0, ar.astype(np.int32), ac.astype(np.int32)),
+            cfg.n_layers))
         spd = spd_matrix(gp.with_self_loops(), cfg.max_spd) \
             if cfg.graph_bias == "spd" else None
         lay = build_layout(gp, bq=bq, bk=bk, k_clusters=k, d_b=d_b,
@@ -137,8 +216,21 @@ def prepare_graph_task(graphs: list[Graph], cfg, *, bq: int = 32,
             buckets[i, :nq_i, :lay.mb] = lay.buckets
     batch = {"feat": feat, "in_deg": in_deg, "out_deg": out_deg,
              "labels": labels, "block_idx": block_idx, "buckets": buckets}
+    # batch-level aggregates: counts sum, ratios average, conditions must
+    # hold for every graph (one failing graph forces the dense step)
+    per = [lay.stats for _, lay in prepared]
+    stats = {"graphs": len(prepared)}
+    for key in ("beta_g", "beta_thre", "density"):
+        stats[key] = float(np.mean([s[key] for s in per]))
+    for key in ("clusters_transferred", "clusters_total", "active_blocks",
+                "edges_kept", "edges_dropped"):
+        stats[key] = int(sum(s[key] for s in per))
+    report = ConditionReport(
+        all(r.c1_self_loops for r in reports),
+        all(r.c2_hamiltonian for r in reports),
+        all(r.c3_reachable for r in reports),
+        max(r.est_diameter for r in reports))
     layout = ClusterLayout(S, bq, bk, block_idx[0], buckets[0],
-                           prepared[0][1].n_buckets, prepared[0][1].stats)
-    report = check_conditions(prepared[0][0].with_self_loops(), cfg.n_layers)
-    return PreparedGraph(batch, layout, report, 0.0,
+                           prepared[0][1].n_buckets, stats)
+    return PreparedGraph(batch, layout, report, float(np.mean(cuts)),
                          time.perf_counter() - t0)

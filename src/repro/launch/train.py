@@ -8,6 +8,14 @@ is already host-aware).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b --smoke \
       --steps 50 --seq 128 --batch 8
+
+Graph-family archs (graphormer_slim/large, gt) train the elastic loop
+instead: an ElasticGraphTask on a synthetic SBM graph, with the AutoTuner
+re-reforming the layout every --elastic-every steps and the dense
+interleave step firing every --interleave-period steps:
+
+  PYTHONPATH=src python -m repro.launch.train --arch graphormer_slim \
+      --smoke --steps 60 --graph-nodes 512
 """
 
 from __future__ import annotations
@@ -41,11 +49,24 @@ def main(argv=None):
                     choices=["auto", "ref", "interpret", "compiled"],
                     help="kernel dispatch (repro.kernels.ops): auto = "
                          "Pallas on TPU / jnp oracle elsewhere")
+    ap.add_argument("--graph-nodes", type=int, default=512,
+                    help="[graph archs] synthetic SBM graph size")
+    ap.add_argument("--graph-clusters", type=int, default=4)
+    ap.add_argument("--interleave-period", type=int, default=-1,
+                    help="[graph archs] dense step every k steps "
+                         "(-1 = config default, 0 = never)")
+    ap.add_argument("--elastic-every", type=int, default=-1,
+                    help="[graph archs] steps per AutoTuner epoch / "
+                         "re-layout boundary (-1 = config default, "
+                         "0 = frozen layout)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build(cfg)
     print(f"arch={cfg.name} params={model.n_params():,}")
+
+    if cfg.family == "graph":
+        return _graph_main(args, cfg, model)
 
     mesh = recipe = None
     if args.mesh_model > 1:
@@ -67,11 +88,60 @@ def main(argv=None):
     from repro.kernels.ops import dispatch_table
     print(f"kernel dispatch: {dispatch_table()}")
     state, status = trainer.run()
+    if not trainer.history:  # restored a finished run: nothing to do
+        print(f"status={status} (already at step {int(state['step'])})")
+        return trainer
     for h in trainer.history[:: max(1, len(trainer.history) // 10)]:
         print(f"step {h['step']:4d} loss {h['loss']:.4f} "
               f"{h['seconds']*1e3:.0f}ms")
     print(f"status={status} final_loss={trainer.history[-1]['loss']:.4f} "
           f"stragglers={len(trainer.stragglers)}")
+    return trainer
+
+
+def _graph_main(args, cfg, model):
+    """Elastic graph training: tuner -> re-layout -> interleave, end to
+    end in the fault-tolerant Trainer."""
+    from repro.core.graph import sbm_graph
+    from repro.runtime.elastic import ElasticGraphTask
+
+    if args.mesh_model > 1:
+        print(f"NOTE: --mesh-model {args.mesh_model} is ignored for graph "
+              f"archs — the elastic CLI trains single-device (the sharded "
+              f"path is exercised via sharded_cluster_attention tests)")
+    interleave = cfg.interleave_period if args.interleave_period < 0 \
+        else args.interleave_period
+    elastic_every = cfg.elastic_every if args.elastic_every < 0 \
+        else args.elastic_every
+    g = sbm_graph(args.graph_nodes, args.graph_clusters, p_in=0.04,
+                  p_out=0.002, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    task = ElasticGraphTask(g, cfg)
+    print(f"graph: n={g.n} e={g.e} beta_G={g.sparsity:.4f} | "
+          f"ladder={[round(b, 4) for b in task.tuner.ladder]} "
+          f"mb_cap={task.mb_cap} prep={task.prep_seconds:.2f}s")
+    tc = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, lr=args.lr,
+                       warmup=max(2, args.steps // 10),
+                       state_dtype=args.state_dtype,
+                       attn_impl=args.attn_impl,
+                       interleave_period=interleave,
+                       elastic_every=elastic_every)
+    trainer = Trainer(model, tc, elastic=task)
+    state, status = trainer.run()
+    if not trainer.history:  # restored a finished run: nothing to do
+        print(f"status={status} (already at step {int(state['step'])})")
+        return trainer
+    for h in trainer.history[:: max(1, len(trainer.history) // 10)]:
+        mode = "dense " if h["dense"] else "sparse"
+        print(f"step {h['step']:4d} [{mode}] loss {h['loss']:.4f} "
+              f"acc {h['acc']:.3f} beta_thre {h['beta_thre']:.4f}")
+    for m in task.moves:
+        print(f"ladder move @ step {m.step}: pos={m.pos} "
+              f"beta_thre={m.beta_thre:.4f} (LDR {m.ldr:+.2e})")
+    print(f"status={status} final_loss={trainer.history[-1]['loss']:.4f} "
+          f"moves={len(task.moves)} "
+          f"dense_steps={sum(1 for h in trainer.history if h['dense'])}")
     return trainer
 
 

@@ -90,6 +90,8 @@ class Model:
     prefill: Callable       # (params, batch) -> (logits, cache)
     decode: Callable        # (params, cache, tokens, pos) -> (logits, cache)
     cache_defs: Callable    # (batch, seq_len) -> defs
+    # graph family: dense-interleave loss (paper §III-B); None elsewhere
+    loss_dense: Callable | None = None
 
     def init(self, key):
         return nnp.init_tree(self.param_defs, key)

@@ -14,7 +14,17 @@ Production concerns implemented (and unit-tested at CPU scale):
   come from the current run's recipe, not the saved one);
 * kernel dispatch: ``TrainerConfig.attn_impl`` routes every attention/SSD
   op in the jitted step through repro.kernels.ops (oracle / Pallas
-  interpret / Pallas compiled) — no call-site edits anywhere in the model.
+  interpret / Pallas compiled) — no call-site edits anywhere in the model;
+* elastic graph training (paper §III-B/D): pass an
+  ``runtime.elastic.ElasticGraphTask`` and the loop closes the paper's
+  dynamic-optimization claim — every ``elastic_every`` steps the epoch's
+  (mean loss, wall time) feed the AutoTuner, a ladder move swaps in the
+  re-reformed layout host-side (shape-stable, zero retraces), and every
+  ``interleave_period``-th step runs the *dense* jitted step
+  (fully-connected attention biased from the layout) instead of the
+  sparse one. Exactly two step traces exist for the whole run. Tuner
+  position / beta_thre / layout stats ride in the checkpoint manifest, so
+  an elastic restart resumes the ladder instead of resetting it.
 """
 
 from __future__ import annotations
@@ -27,9 +37,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 from repro.ckpt.checkpoint import Checkpointer
+from repro.core.dual_attention import use_dense_step
 from repro.kernels import ops as kernel_ops
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.parallel.axes import axis_rules
@@ -52,6 +64,18 @@ class TrainerConfig:
     # auto = Pallas-compiled on TPU / jnp oracle elsewhere; ref / interpret /
     # compiled force a path. REPRO_FORCE_PALLAS* env vars still win.
     attn_impl: str = "auto"
+    # elastic graph training (needs an ElasticGraphTask):
+    interleave_period: int = 0   # dense step every k steps (0 = never)
+    elastic_every: int = 0       # steps per tuner epoch (0 = frozen layout)
+    # crash rescue: refresh an undonated host copy of the state every k
+    # steps so the crash-consistent save survives donated-buffer deletion
+    # when the jitted step itself dies mid-call (0 = off). Each refresh is
+    # a synchronous device_get of the whole state — fine at this repo's
+    # CPU test scale; raise the cadence (or disable) for big states. Only
+    # active when donation is on and no mesh is set: undonated state
+    # stays live for the crash save, and sharded runs fall back to their
+    # periodic checkpoints.
+    rescue_every: int = 1
 
 
 @dataclasses.dataclass
@@ -62,13 +86,20 @@ class StragglerReport:
 
 
 class Trainer:
-    def __init__(self, model, cfg: TrainerConfig, batch_fn: Callable[[int], Any],
-                 *, mesh=None, recipe=None, donate: bool = True):
+    def __init__(self, model, cfg: TrainerConfig,
+                 batch_fn: Callable[[int], Any] | None = None,
+                 *, mesh=None, recipe=None, donate: bool = True,
+                 elastic=None):
         self.model = model
         self.cfg = cfg
         self.batch_fn = batch_fn
         self.mesh = mesh
         self.recipe = recipe
+        # elastic graph mode: an ElasticGraphTask supplies the (re-layable)
+        # batch instead of batch_fn and absorbs epoch (loss, time) signals
+        self.elastic = elastic
+        if batch_fn is None and elastic is None:
+            raise ValueError("need batch_fn or an elastic task")
         # route every kernel call in the jitted step through the dispatch
         # layer: one config knob selects oracle / interpret / compiled
         # everywhere, including inside shard_map (kernels/ops.py)
@@ -80,28 +111,38 @@ class Trainer:
         self.stragglers: list[StragglerReport] = []
         self.history: list[dict] = []
         self._preempted = False
+        self._rescue: tuple[int, Any] | None = None
+        self._donate = donate
 
-        def step_fn(state, batch):
-            def loss_fn(p):
-                loss, metrics = self.model.loss(p, batch)
-                return loss, metrics
+        def make_step(loss):
+            def step_fn(state, batch):
+                def loss_fn(p):
+                    return loss(p, batch)
 
-            if recipe is not None and mesh is not None:
-                with axis_rules(recipe, mesh):
-                    (loss, metrics), grads = jax.value_and_grad(
+                if recipe is not None and mesh is not None:
+                    with axis_rules(recipe, mesh):
+                        (lval, metrics), grads = jax.value_and_grad(
+                            loss_fn, has_aux=True)(state["params"])
+                        new_p, new_opt = self.opt.update(
+                            grads, state["opt"], state["params"])
+                else:
+                    (lval, metrics), grads = jax.value_and_grad(
                         loss_fn, has_aux=True)(state["params"])
                     new_p, new_opt = self.opt.update(
                         grads, state["opt"], state["params"])
-            else:
-                (loss, metrics), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(state["params"])
-                new_p, new_opt = self.opt.update(
-                    grads, state["opt"], state["params"])
-            return ({"params": new_p, "opt": new_opt,
-                     "step": state["step"] + 1},
-                    {"loss": loss, **metrics})
+                return ({"params": new_p, "opt": new_opt,
+                         "step": state["step"] + 1},
+                        {"loss": lval, **metrics})
 
-        self._step = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+            return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+        self._step = make_step(self.model.loss)
+        # the dual-interleave branch: a SECOND jitted step (dense
+        # attention through the same dispatch layer), selected per step
+        # host-side by use_dense_step — two traces total, never more
+        self._step_dense = None
+        if elastic is not None and getattr(model, "loss_dense", None):
+            self._step_dense = make_step(self.model.loss_dense)
 
     def _mesh_ctx(self):
         """Ambient-mesh context for step execution — the distributed trainer
@@ -124,7 +165,16 @@ class Trainer:
             return self.init_state(seed), 0
         state = self.ckpt.restore(latest)
         state["step"] = jnp.asarray(state["step"], jnp.int32)
+        if self.elastic is not None:
+            extra = self.ckpt.load_extra(latest)
+            if extra and "elastic" in extra:
+                self.elastic.load_state_dict(extra["elastic"])
         return state, latest
+
+    def _ckpt_extra(self):
+        if self.elastic is None:
+            return None
+        return {"elastic": self.elastic.state_dict()}
 
     # ------------------------------------------------------------ loop
 
@@ -143,15 +193,32 @@ class Trainer:
             pass  # not main thread
 
         ema = None
+        task = self.elastic
+        # rescue only matters when donation can delete buffers mid-call;
+        # sharded state is left to the periodic checkpoints (device_get of
+        # non-addressable arrays is not portable)
+        rescue_on = cfg.rescue_every > 0 and self._donate and \
+            self.mesh is None
+        epoch_losses: list[float] = []
+        epoch_seconds = 0.0
         try:
             for step in range(start, cfg.steps):
                 if step == cfg.fail_at_step:
                     raise RuntimeError(f"injected failure at step {step}")
                 t0 = time.perf_counter()
-                batch = {k: jnp.asarray(v)
-                         for k, v in self.batch_fn(step).items()}
+                dense = False
+                if task is not None:
+                    # dual-interleave schedule (absolute step -> cadence
+                    # survives restart); conditions failing forces dense
+                    dense = self._step_dense is not None and use_dense_step(
+                        step, cfg.interleave_period, task.conditions_ok)
+                    batch = task.batch()
+                else:
+                    batch = {k: jnp.asarray(v)
+                             for k, v in self.batch_fn(step).items()}
+                fn = self._step_dense if dense else self._step
                 with self._mesh_ctx():
-                    state, metrics = self._step(state, batch)
+                    state, metrics = fn(state, batch)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 dt = time.perf_counter() - t0
                 if step - start >= 2:  # skip compile-dominated warmup steps
@@ -161,19 +228,40 @@ class Trainer:
                             dt > cfg.straggler_factor * prev_ema:
                         self.stragglers.append(
                             StragglerReport(step, dt, prev_ema))
-                self.history.append({"step": step + 1, **metrics,
-                                     "seconds": dt})
+                rec = {"step": step + 1, **metrics, "seconds": dt}
+                if task is not None:
+                    rec["dense"] = dense
+                    rec["beta_thre"] = task.beta_thre
+                self.history.append(rec)
+                if rescue_on and (step + 1) % cfg.rescue_every == 0:
+                    # undonated host copy: the crash save below must not
+                    # touch buffers the next _step call donates away
+                    self._rescue = (step + 1, jax.device_get(state))
+                if task is not None and cfg.elastic_every > 0:
+                    # compile-dominated warmup steps would poison the LDR
+                    # denominator (the straggler EMA skips them too)
+                    if step - start >= 2:
+                        epoch_losses.append(metrics["loss"])
+                        epoch_seconds += dt
+                    if (step + 1) % cfg.elastic_every == 0:
+                        if epoch_losses:
+                            task.on_epoch(float(np.mean(epoch_losses)),
+                                          epoch_seconds, step=step + 1)
+                        epoch_losses, epoch_seconds = [], 0.0
                 if (step + 1) % cfg.ckpt_every == 0:
-                    self.ckpt.save(step + 1, state)
+                    self.ckpt.save(step + 1, state,
+                                   extra=self._ckpt_extra())
                 if self._preempted:
-                    self.ckpt.save(step + 1, state, blocking=True)
+                    self.ckpt.save(step + 1, state, blocking=True,
+                                   extra=self._ckpt_extra())
                     return state, "preempted"
-            self.ckpt.save(cfg.steps, state, blocking=True)
+            self.ckpt.save(cfg.steps, state, blocking=True,
+                           extra=self._ckpt_extra())
             return state, "done"
         except Exception:
             # crash-consistent save so a restart resumes, then re-raise
             try:
-                self.ckpt.save(int(state["step"]), state, blocking=True)
+                self._crash_save(state)
             except Exception:
                 pass
             raise
@@ -183,3 +271,25 @@ class Trainer:
                 signal.signal(signal.SIGTERM, old)
             except (ValueError, TypeError):
                 pass
+
+    def _crash_save(self, state):
+        """Rescue checkpoint after an uncaught failure. When ``_step``
+        raised mid-call its donated inputs are deleted — ``state`` then
+        points at dead buffers, so fall back to the last undonated host
+        copy (``rescue_every``) instead of crashing the rescue itself."""
+        if _tree_live(state):
+            self.ckpt.save(int(state["step"]), state, blocking=True,
+                           extra=self._ckpt_extra())
+        elif self._rescue is not None:
+            step, host = self._rescue
+            self.ckpt.save(step, host, blocking=True,
+                           extra=self._ckpt_extra())
+
+
+def _tree_live(tree) -> bool:
+    """False iff any jax.Array leaf has been deleted (donated away)."""
+    for leaf in jax.tree.leaves(tree):
+        is_deleted = getattr(leaf, "is_deleted", None)
+        if callable(is_deleted) and is_deleted():
+            return False
+    return True

@@ -134,3 +134,96 @@ def test_augment_edges_idempotent_invariants(seed):
     # self loops for every position
     loops = np.count_nonzero(r == c)
     assert loops == s
+
+
+# ------------------------------------------------------------ SPD bias
+
+
+def _path_graph(n):
+    src = np.arange(n - 1, dtype=np.int32)
+    return Graph(n, src, src + 1).symmetrized()
+
+
+def test_spd_buckets_equal_hop_counts_on_path_graph():
+    """Regression (SPD bucket lookup was off by n_global): on a path
+    graph every defined node-pair bucket must equal the true hop count,
+    and pairs touching the global token get the dedicated virtual bucket
+    max_spd + 1 (self pairs stay bucket 0)."""
+    from repro.core.dual_attention import dense_buckets_from_layout
+    from repro.core.encodings import spd_matrix
+
+    n, ng, max_spd = 12, 1, 16
+    g = _path_graph(n)
+    spd = spd_matrix(g.with_self_loops(), max_spd)
+    lay = build_layout(g, bq=8, bk=8, k_clusters=1, d_b=4, beta_thre=0.0,
+                       n_global=ng, spd=spd, max_spd=max_spd)
+    assert lay.n_buckets == max_spd + 2
+    dense = dense_buckets_from_layout(lay)
+    for i in range(n):
+        for j in range(n):
+            b = int(dense[ng + i, ng + j])
+            if b >= 0:
+                assert b == min(abs(i - j), max_spd), (i, j, b)
+    # global token: self = 0, everything else the virtual bucket
+    assert int(dense[0, 0]) == 0
+    row = dense[0, ng:ng + n]
+    assert (row[row >= 0] == max_spd + 1).all()
+    col = dense[ng:ng + n, 0]
+    assert (col[col >= 0] == max_spd + 1).all()
+
+
+def test_spd_node_task_pipeline_runs():
+    """graph_bias="spd" end to end (crashed with NameError at seed)."""
+    from repro.configs import get_smoke_config
+    from repro.data.graph_pipeline import prepare_node_task
+
+    cfg = get_smoke_config("graphormer_slim").replace(graph_bias="spd")
+    g = sbm_graph(96, 2, 0.05, 0.005, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    prep = prepare_node_task(g, cfg, bq=16, bk=16, d_b=8)
+    assert prep.layout.n_buckets == cfg.max_spd + 2
+    bu = prep.batch["buckets"]
+    assert bu.max() <= cfg.max_spd + 1
+    # hop counts present beyond the adjacency buckets (true SPD values)
+    assert (bu[bu >= 0] <= cfg.max_spd + 1).all()
+
+
+def test_graph_task_aggregates_over_batch():
+    """prepare_graph_task stats/cut/report must aggregate the whole
+    batch, not be read off graph 0."""
+    from repro.configs import get_smoke_config
+    from repro.data.graph_pipeline import prepare_graph_task
+
+    cfg = get_smoke_config("graphormer_slim")
+    graphs = [sbm_graph(48 + 16 * i, 2, 0.08, 0.01, feat_dim=cfg.feat_dim,
+                        n_classes=cfg.n_classes, seed=i) for i in range(3)]
+    # beta_thre=0: nothing reformed, so exact kept-edge counts are known
+    prep = prepare_graph_task(graphs, cfg, bq=16, bk=16, d_b=8,
+                              beta_thre=0.0)
+    st = prep.layout.stats
+    assert st["graphs"] == 3
+    # counts are sums over the batch: more than any single graph provides
+    assert st["edges_kept"] >= sum(g.e for g in graphs)
+    assert st["clusters_total"] >= 3
+    assert 0.0 < st["density"] <= 1.0
+    assert prep.cut >= 0.0
+    assert prep.report.c1_self_loops  # augmentation guarantees C1 for all
+
+
+def test_pad_layout_mb_is_masked_noop():
+    from repro.configs import get_smoke_config
+    from repro.data.graph_pipeline import pad_layout_mb, prepare_node_task
+
+    cfg = get_smoke_config("graphormer_slim")
+    g = sbm_graph(128, 2, 0.05, 0.005, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=3)
+    prep = prepare_node_task(g, cfg, bq=16, bk=16, d_b=8)
+    mb0 = prep.layout.mb
+    padded = pad_layout_mb(prep, mb0 + 3)
+    assert padded.layout.mb == mb0 + 3
+    assert (padded.layout.block_idx[:, mb0:] == -1).all()
+    assert (padded.layout.buckets[:, mb0:] == -1).all()
+    np.testing.assert_array_equal(padded.layout.block_idx[:, :mb0],
+                                  prep.layout.block_idx)
+    with pytest.raises(ValueError, match="mb_pad"):
+        pad_layout_mb(prep, mb0 - 1)

@@ -38,6 +38,16 @@ def test_benchmarks_doc_covers_every_module():
         f"docs/benchmarks.md is missing sections for: {missing}")
 
 
+def test_readme_documents_elastic_knobs():
+    """The elastic-loop CLI knobs are public surface; the README must
+    name each one launch/train.py actually exposes."""
+    train_src = (ROOT / "src" / "repro" / "launch" / "train.py").read_text()
+    readme = (ROOT / "README.md").read_text()
+    for flag in ("--interleave-period", "--elastic-every"):
+        assert flag in train_src, f"launch/train.py lost {flag}"
+        assert flag in readme, f"README.md does not document {flag}"
+
+
 def test_readme_documents_dispatch_knobs():
     """The dispatch env knobs are part of the public surface; the README
     must name each one that kernels/ops.py actually reads."""

@@ -166,3 +166,15 @@ def test_checkpoint_unknown_codec_rejected(tmp_path):
     with pytest.raises(ValueError, match="codec"):
         Checkpointer(str(tmp_path), codec="lz9").save(
             1, {"x": jnp.ones(2)}, blocking=True)
+
+
+def test_checkpoint_extra_manifest_roundtrip(tmp_path):
+    """The manifest's `extra` dict (elastic tuner/layout state) must
+    round-trip verbatim and default to None when absent."""
+    ck = Checkpointer(str(tmp_path))
+    extra = {"elastic": {"tuner": {"pos": 3, "ladder": [0.0, 0.1, 1.0]},
+                         "layout_stats": {"density": 0.25}}}
+    ck.save(1, {"x": jnp.ones(2)}, blocking=True, extra=extra)
+    ck.save(2, {"x": jnp.ones(2)}, blocking=True)
+    assert ck.load_extra(1) == extra
+    assert ck.load_extra(2) is None
