@@ -56,7 +56,7 @@ def trainer_elastic(epochs):
                        ckpt_dir=tempfile.mkdtemp(prefix="torchgt_beta_"),
                        interleave_period=cfg.interleave_period,
                        elastic_every=1)
-    tr = Trainer(build(cfg), tc, elastic=task)
+    tr = Trainer(build(cfg), tc, task=task)
     tr.run()
     import numpy as np
     t_epoch = float(np.median([h["seconds"] for h in tr.history[2:]]))

@@ -1,6 +1,9 @@
 """Graph-level classification (paper's MalNet/ZINC setting, synthetic):
-each sequence is one graph; the label lives on the global token. Exercises
-prepare_graph_task packing (per-graph cluster layouts padded to a batch).
+each sequence is one graph; the label lives on the global token. Runs the
+REAL runtime — ``repro.tasks.GraphLevelTask`` through the fault-tolerant
+Trainer, with the elastic ladder re-reforming every mini-batch's layout
+and the dense interleave step firing on schedule — not a hand-rolled
+loop.
 
   PYTHONPATH=src python examples/graph_level_training.py
 """
@@ -8,73 +11,52 @@ prepare_graph_task packing (per-graph cluster layouts padded to a batch).
 import argparse
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
 from repro.configs import get_smoke_config  # noqa: E402
-from repro.core.graph import sbm_graph  # noqa: E402
-from repro.core.graph_model import graph_loss  # noqa: E402
-from repro.data.graph_pipeline import prepare_graph_task  # noqa: E402
 from repro.models import build  # noqa: E402
-from repro.optim.adamw import AdamW  # noqa: E402
-
-
-def make_dataset(n_graphs, cfg, seed=0):
-    """Graphs whose class = number of planted clusters (1..n_classes)."""
-    rng = np.random.default_rng(seed)
-    graphs = []
-    for i in range(n_graphs):
-        c = int(rng.integers(1, cfg.n_classes + 1))
-        n = int(rng.integers(60, 120))
-        g = sbm_graph(n, c, p_in=0.25, p_out=0.01, feat_dim=cfg.feat_dim,
-                      n_classes=0, seed=seed * 1000 + i, shuffle=True)
-        g.labels = np.full(g.n, c - 1, np.int32)
-        feat = rng.normal(0, 0.3, (g.n, cfg.feat_dim)).astype(np.float32)
-        ind, _ = g.degrees()
-        feat[:, 0] = ind / 20.0  # degree signal (scales with cluster size)
-        g.feat = feat
-        graphs.append(g)
-    return graphs
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: E402
+from repro.tasks import (GraphLevelTask,  # noqa: E402
+                         synthetic_graph_level_dataset)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--epochs", type=int, default=60)
+    ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--graphs", type=int, default=16)
+    ap.add_argument("--batch-graphs", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_smoke_config("graphormer_slim")
-    train_g = make_dataset(args.graphs, cfg, seed=1)
-    test_g = make_dataset(args.graphs // 2, cfg, seed=2)
-    prep_tr = prepare_graph_task(train_g, cfg, bq=16, bk=16, d_b=8)
-    prep_te = prepare_graph_task(test_g, cfg, bq=16, bk=16, d_b=8)
-    batch_tr = {k: jnp.asarray(v) for k, v in prep_tr.batch.items()}
-    batch_te = {k: jnp.asarray(v) for k, v in prep_te.batch.items()}
-    print(f"packed {args.graphs} graphs -> seq {prep_tr.layout.seq_len}, "
-          f"density {prep_tr.layout.density():.3f}")
+    train_g = synthetic_graph_level_dataset(args.graphs, cfg, seed=1)
+    test_g = synthetic_graph_level_dataset(args.graphs // 2, cfg, seed=2)
+    task = GraphLevelTask(train_g, cfg, eval_graphs=test_g,
+                          batch_graphs=args.batch_graphs, delta=5)
+    print(f"packed {args.graphs} graphs -> {task.n_batches} mini-batches "
+          f"of seq {task.layout.seq_len}, density "
+          f"{task.layout.density():.3f}, mb_cap {task.mb_cap}")
 
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    opt = AdamW(lr=3e-3)
-    ost = opt.init(params)
+    tc = TrainerConfig(steps=args.steps, ckpt_every=10 ** 6, lr=3e-3,
+                       warmup=2,
+                       ckpt_dir=tempfile.mkdtemp(prefix="torchgt_gl_"),
+                       interleave_period=cfg.interleave_period,
+                       elastic_every=2)
+    trainer = Trainer(build(cfg), tc, task=task)
+    state, status = trainer.run()
 
-    @jax.jit
-    def step(p, o, b):
-        (loss, m), grads = jax.value_and_grad(model.loss, has_aux=True)(p, b)
-        new_p, new_o = opt.update(grads, o, p)
-        return loss, m["acc"], new_p, new_o
-
-    eval_fn = jax.jit(lambda p, b: graph_loss(p, cfg, b)[1]["acc"])
-    for ep in range(args.epochs):
-        loss, acc, params, ost = step(params, ost, batch_tr)
-        if ep % 15 == 0 or ep == args.epochs - 1:
-            print(f"epoch {ep:3d} loss={float(loss):.4f} "
-                  f"train_acc={float(acc):.3f} "
-                  f"test_acc={float(eval_fn(params, batch_te)):.3f}")
+    for h in trainer.history:
+        ep = h["step"] - 1
+        if ep % 15 == 0 or ep == args.steps - 1:
+            print(f"step {ep:3d} [{h['variant']:6s}] loss={h['loss']:.4f} "
+                  f"train_acc={h['acc']:.3f} beta_thre={h['beta_thre']:.4f}")
+    ev = task.eval(state["params"])
+    print(f"done ({status}): test_acc={ev['acc']:.3f} "
+          f"ladder_moves={len(task.moves)} "
+          f"dense_steps={sum(1 for h in trainer.history if h['dense'])} "
+          f"traces={trainer._step._cache_size()}"
+          f"+{trainer._step_dense._cache_size()}")
 
 
 if __name__ == "__main__":

@@ -20,8 +20,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.core.graph import sbm_graph  # noqa: E402
 from repro.models import build  # noqa: E402
-from repro.runtime.elastic import ElasticGraphTask  # noqa: E402
 from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: E402
+from repro.tasks import NodeTask  # noqa: E402
 
 
 def main():
@@ -30,7 +30,7 @@ def main():
                   n_classes=cfg.n_classes, seed=0)
     print(f"graph: {g.n} nodes, {g.e} edges, sparsity beta_G={g.sparsity:.4f}")
 
-    task = ElasticGraphTask(g, cfg, delta=5)
+    task = NodeTask(g, cfg, delta=5)
     prep = task.prep
     print(f"cluster reorder: cut_ratio={prep.cut:.3f} "
           f"(ladder prep {task.prep_seconds*1e3:.0f} ms, "
@@ -46,7 +46,7 @@ def main():
                        ckpt_dir=tempfile.mkdtemp(prefix="torchgt_quick_"),
                        interleave_period=cfg.interleave_period,
                        elastic_every=5)
-    trainer = Trainer(build(cfg), tc, elastic=task)
+    trainer = Trainer(build(cfg), tc, task=task)
     state, status = trainer.run()
 
     for h in trainer.history:

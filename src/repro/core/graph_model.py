@@ -138,12 +138,17 @@ def graph_forward(p, cfg, batch, dense: bool):
     return L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
 
 
+def apply_head(p, h):
+    """The one classification-head projection every task head rides:
+    (B, S, D) hidden states -> (B, S, n_classes) logits."""
+    return jnp.einsum("bsd,dc->bsc", h, p["head"].astype(h.dtype))
+
+
 def graph_loss(p, cfg, batch, dense: bool = False):
     """Node-level masked cross-entropy (labels -1 ignored); graph-level
     tasks put the label on the global-token position."""
     h = graph_forward(p, cfg, batch, dense)
-    logits = jnp.einsum("bsd,dc->bsc", h, p["head"].astype(h.dtype))
-    logits = logits.astype(F32)
+    logits = apply_head(p, h).astype(F32)
     labels = batch["labels"]
     mask = (labels >= 0).astype(F32)
     logz = jax.nn.logsumexp(logits, axis=-1)
@@ -155,11 +160,11 @@ def graph_loss(p, cfg, batch, dense: bool = False):
     return loss, {"xent": loss, "acc": acc}
 
 
-def graph_loss_dense(p, cfg, batch):
-    """Dense interleave step (§III-B): fully-connected attention, biased
-    where the sparse pattern defines structure. The bias is built inside
-    the trace from the ``dense_buckets`` batch array — data, not a static
-    constant — so elastic re-layout never retraces this step."""
+def with_dense_bias(p, cfg, batch):
+    """Batch copy with ``dense_bias`` materialized from the scattered
+    ``dense_buckets`` array (when present). The bias is built inside the
+    trace from an *array input* — data, not a static constant — so
+    elastic re-layout never retraces the dense step."""
     from repro.core.dual_attention import dense_bias_from_buckets
 
     b = dict(batch)
@@ -167,12 +172,17 @@ def graph_loss_dense(p, cfg, batch):
             and p.get("bias_table") is not None:
         b["dense_bias"] = dense_bias_from_buckets(
             b["dense_buckets"], p["bias_table"], cfg.n_heads)
-    return graph_loss(p, cfg, b, dense=True)
+    return b
+
+
+def graph_loss_dense(p, cfg, batch):
+    """Dense interleave step (§III-B): fully-connected attention, biased
+    where the sparse pattern defines structure."""
+    return graph_loss(p, cfg, with_dense_bias(p, cfg, batch), dense=True)
 
 
 def graph_predict(p, cfg, batch, dense: bool = False):
-    h = graph_forward(p, cfg, batch, dense)
-    return jnp.einsum("bsd,dc->bsc", h, p["head"].astype(h.dtype))
+    return apply_head(p, graph_forward(p, cfg, batch, dense))
 
 
 def build_graph_model(cfg):
@@ -181,9 +191,12 @@ def build_graph_model(cfg):
     return Model(
         cfg=cfg,
         param_defs=graph_defs(cfg),
-        loss=lambda p, b: graph_loss(p, cfg, b, dense=False),
+        loss_variants={
+            "sparse": lambda p, b: graph_loss(p, cfg, b, dense=False),
+            # the dense-interleave variant (§III-B); tasks schedule it
+            "dense": lambda p, b: graph_loss_dense(p, cfg, b),
+        },
         prefill=lambda p, b: (graph_predict(p, cfg, b), {}),
         decode=None,  # graph transformers have no autoregressive decode
         cache_defs=None,
-        loss_dense=lambda p, b: graph_loss_dense(p, cfg, b),
     )

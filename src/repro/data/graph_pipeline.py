@@ -29,6 +29,11 @@ class PreparedGraph:
     report: ConditionReport
     cut: float
     prep_seconds: float
+    # cluster-reorder permutation (perm[i] = original node id at sequence
+    # position i - n_global); None for multi-graph batches. Tasks that
+    # address nodes directly (LinkTask edge endpoints) map original ids
+    # to sequence positions through this.
+    perm: np.ndarray | None = None
 
 
 def prepare_node_task(g: Graph, cfg, *, beta_thre: float | None = None,
@@ -102,11 +107,12 @@ def prepare_node_task_ladder(g: Graph, cfg, beta_thres,
     in_deg[0, ng:ng + g.n] = degree_clip(ind, cfg.max_degree)
     out_deg[0, ng:ng + g.n] = degree_clip(outd, cfg.max_degree)
     labels = np.full((1, S), -1, np.int32)
-    lab = gp.labels.copy()
-    if train_mask is not None:
-        tm = train_mask[perm]
-        lab = np.where(tm, lab, -1)
-    labels[0, ng:ng + g.n] = lab
+    if gp.labels is not None:  # label-less graphs (link tasks) stay masked
+        lab = gp.labels.copy()
+        if train_mask is not None:
+            tm = train_mask[perm]
+            lab = np.where(tm, lab, -1)
+        labels[0, ng:ng + g.n] = lab
     pe = None
     if cfg.name.startswith("gt"):
         pe = np.zeros((1, S, 8), np.float32)
@@ -131,7 +137,8 @@ def prepare_node_task_ladder(g: Graph, cfg, beta_thres,
             from repro.core.dual_attention import dense_buckets_from_layout
             batch["dense_buckets"] = dense_buckets_from_layout(layout)[None]
         now = time.perf_counter()
-        out.append(PreparedGraph(batch, layout, report, cut, now - t_prev))
+        out.append(PreparedGraph(batch, layout, report, cut, now - t_prev,
+                                 perm=perm))
         t_prev = now
     return out
 
@@ -162,19 +169,41 @@ def pad_layout_mb(prep: PreparedGraph, mb: int) -> PreparedGraph:
     layout = ClusterLayout(lay.seq_len, lay.bq, lay.bk, block_idx, buckets,
                            lay.n_buckets, lay.stats)
     return PreparedGraph(batch, layout, prep.report, prep.cut,
-                         prep.prep_seconds)
+                         prep.prep_seconds, perm=prep.perm)
 
 
 def prepare_graph_task(graphs: list[Graph], cfg, *, bq: int = 32,
                        bk: int = 32, d_b: int = 8,
                        beta_thre: float | None = None,
+                       with_dense_buckets: bool = False,
+                       seq_pad: int | None = None,
+                       mb_pad: int | None = None,
                        seed: int = 0) -> PreparedGraph:
     """Graph-level classification: each sequence is one (small) graph,
     label sits on the global token (position 0). Stats, cut ratio and the
     condition report are aggregated over the whole batch, not read off
-    graph 0."""
+    graph 0. ``seq_pad``/``mb_pad`` force a fixed shape budget (see
+    :func:`pad_graph_batch`) so mini-batches of differently-sized graphs
+    stay shape-identical across training steps and ladder rungs."""
+    return prepare_graph_task_ladder(
+        graphs, cfg, [beta_thre], bq=bq, bk=bk, d_b=d_b,
+        with_dense_buckets=with_dense_buckets, seq_pad=seq_pad,
+        mb_pad=mb_pad, seed=seed)[0]
+
+
+def prepare_graph_task_ladder(graphs: list[Graph], cfg, beta_thres,
+                              *, bq: int = 32, bk: int = 32, d_b: int = 8,
+                              with_dense_buckets: bool = False,
+                              seq_pad: int | None = None,
+                              mb_pad: int | None = None,
+                              seed: int = 0) -> list[PreparedGraph]:
+    """One PreparedGraph per ``beta_thre``, sharing the rung-invariant
+    per-graph work (cluster reorder, condition check, SPD, features)
+    exactly like :func:`prepare_node_task_ladder` does for single-graph
+    tasks — probing an AutoTuner ladder costs one reorder pass plus a
+    layout per (graph, rung)."""
     t0 = time.perf_counter()
-    prepared = []
+    invariant = []   # (gp, k_clusters, spd) per graph
     cuts = []
     reports = []
     for gr in graphs:
@@ -188,49 +217,167 @@ def prepare_graph_task(graphs: list[Graph], cfg, *, bq: int = 32,
             cfg.n_layers))
         spd = spd_matrix(gp.with_self_loops(), cfg.max_spd) \
             if cfg.graph_bias == "spd" else None
-        lay = build_layout(gp, bq=bq, bk=bk, k_clusters=k, d_b=d_b,
-                           beta_thre=beta_thre, n_global=cfg.n_global,
-                           chain=True, buckets=True, spd=spd,
-                           max_spd=cfg.max_spd)
-        prepared.append((gp, lay))
-    S = max(lay.seq_len for _, lay in prepared)
-    S = -(-S // bq) * bq
-    mb = max(lay.mb for _, lay in prepared)
-    B = len(graphs)
-    ng = cfg.n_global
-    feat = np.zeros((B, S, cfg.feat_dim), np.float32)
-    in_deg = np.zeros((B, S), np.int32)
-    out_deg = np.zeros((B, S), np.int32)
-    labels = np.full((B, S), -1, np.int32)
-    block_idx = np.full((B, S // bq, mb), -1, np.int32)
-    buckets = np.full((B, S // bq, mb, bq, bk), -1, np.int8)
-    for i, (gp, lay) in enumerate(prepared):
-        feat[i, ng:ng + gp.n] = gp.feat
-        ind, outd = gp.degrees()
-        in_deg[i, ng:ng + gp.n] = degree_clip(ind, cfg.max_degree)
-        out_deg[i, ng:ng + gp.n] = degree_clip(outd, cfg.max_degree)
-        labels[i, 0] = gp.labels[0]  # graph label (stored on node 0)
-        nq_i = lay.block_idx.shape[0]
-        block_idx[i, :nq_i, :lay.mb] = lay.block_idx
-        if lay.buckets is not None:
-            buckets[i, :nq_i, :lay.mb] = lay.buckets
-    batch = {"feat": feat, "in_deg": in_deg, "out_deg": out_deg,
-             "labels": labels, "block_idx": block_idx, "buckets": buckets}
-    # batch-level aggregates: counts sum, ratios average, conditions must
-    # hold for every graph (one failing graph forces the dense step)
-    per = [lay.stats for _, lay in prepared]
-    stats = {"graphs": len(prepared)}
-    for key in ("beta_g", "beta_thre", "density"):
-        stats[key] = float(np.mean([s[key] for s in per]))
-    for key in ("clusters_transferred", "clusters_total", "active_blocks",
-                "edges_kept", "edges_dropped"):
-        stats[key] = int(sum(s[key] for s in per))
+        invariant.append((gp, k, spd))
     report = ConditionReport(
         all(r.c1_self_loops for r in reports),
         all(r.c2_hamiltonian for r in reports),
         all(r.c3_reachable for r in reports),
         max(r.est_diameter for r in reports))
+    cut = float(np.mean(cuts))
+
+    # only block_idx/buckets/dense_buckets depend on the rung; everything
+    # else (feat, degrees, labels, lap_pe) is packed ONCE and ALIASED
+    # across rungs (same guarantee as prepare_node_task_ladder — the
+    # elastic upload dedup relies on the shared identity)
+    per_rung = [[build_layout(
+        gp, bq=bq, bk=bk, k_clusters=k, d_b=d_b, beta_thre=bt,
+        n_global=cfg.n_global, chain=True, buckets=True, spd=spd,
+        max_spd=cfg.max_spd) for gp, k, spd in invariant]
+        for bt in beta_thres]
+    S = max(lay.seq_len for lay in per_rung[0])  # seq is rung-invariant
+    S = -(-S // max(bq, bk)) * max(bq, bk)
+    gps = [gp for gp, _, _ in invariant]
+    inv_batch = _pack_graph_invariant(gps, cfg, S)
+    out = []
+    t_prev = t0
+    for layouts in per_rung:
+        p = _pack_graph_rung(gps, layouts, inv_batch, cfg, bq, bk,
+                             S, report, cut, 0.0,
+                             with_dense_buckets=with_dense_buckets)
+        now = time.perf_counter()
+        p.prep_seconds = now - t_prev  # rung 0 carries the shared prep
+        t_prev = now
+        out.append(p)
+    if seq_pad is None:
+        seq_pad = max(p.layout.seq_len for p in out)
+    if mb_pad is None:
+        mb_pad = max(p.layout.mb for p in out)
+    shared: dict = {}  # keep invariant arrays aliased through the pad
+    out = [pad_graph_batch(p, seq_pad, mb_pad, _shared=shared)
+           for p in out]
+    out[-1].prep_seconds += time.perf_counter() - t_prev  # the pad pass
+    return out
+
+
+def _pack_graph_invariant(gps, cfg, S):
+    """The rung-invariant half of a packed graph batch: features, clipped
+    degrees, global-token labels and (GT) lap-PE."""
+    B = len(gps)
+    ng = cfg.n_global
+    feat = np.zeros((B, S, cfg.feat_dim), np.float32)
+    in_deg = np.zeros((B, S), np.int32)
+    out_deg = np.zeros((B, S), np.int32)
+    labels = np.full((B, S), -1, np.int32)
+    pe = np.zeros((B, S, 8), np.float32) if cfg.name.startswith("gt") \
+        else None
+    for i, gp in enumerate(gps):
+        feat[i, ng:ng + gp.n] = gp.feat
+        ind, outd = gp.degrees()
+        in_deg[i, ng:ng + gp.n] = degree_clip(ind, cfg.max_degree)
+        out_deg[i, ng:ng + gp.n] = degree_clip(outd, cfg.max_degree)
+        labels[i, 0] = gp.labels[0]  # graph label (stored on node 0)
+        if pe is not None and gp.n > 1:
+            pe[i, ng:ng + gp.n] = lap_pe(gp)
+    batch = {"feat": feat, "in_deg": in_deg, "out_deg": out_deg,
+             "labels": labels}
+    if pe is not None:
+        batch["lap_pe"] = pe
+    return batch
+
+
+def _pack_graph_rung(gps, layouts, inv_batch, cfg, bq, bk, S, report, cut,
+                     prep_seconds, *, with_dense_buckets: bool):
+    """One rung's PreparedGraph: the rung-dependent pattern arrays packed
+    around the shared (aliased, treat as read-only) invariant batch."""
+    B = len(gps)
+    mb = max(lay.mb for lay in layouts)
+    block_idx = np.full((B, S // bq, mb), -1, np.int32)
+    buckets = np.full((B, S // bq, mb, bq, bk), BUCKET_MASKED, np.int8)
+    dense_buckets = np.full((B, S, S), -1, np.int8) \
+        if with_dense_buckets else None
+    for i, lay in enumerate(layouts):
+        nq_i = lay.block_idx.shape[0]
+        block_idx[i, :nq_i, :lay.mb] = lay.block_idx
+        if lay.buckets is not None:
+            buckets[i, :nq_i, :lay.mb] = lay.buckets
+        if dense_buckets is not None:
+            from repro.core.dual_attention import dense_buckets_from_layout
+            si = lay.seq_len
+            dense_buckets[i, :si, :si] = dense_buckets_from_layout(lay)
+    batch = dict(inv_batch)
+    batch["block_idx"] = block_idx
+    batch["buckets"] = buckets
+    if dense_buckets is not None:
+        batch["dense_buckets"] = dense_buckets
+    # batch-level aggregates: counts sum, ratios average, conditions must
+    # hold for every graph (one failing graph forces the dense step)
+    per = [lay.stats for lay in layouts]
+    stats = {"graphs": len(layouts)}
+    for key in ("beta_g", "beta_thre", "density"):
+        stats[key] = float(np.mean([s[key] for s in per]))
+    for key in ("clusters_transferred", "clusters_total", "active_blocks",
+                "edges_kept", "edges_dropped"):
+        stats[key] = int(sum(s[key] for s in per))
     layout = ClusterLayout(S, bq, bk, block_idx[0], buckets[0],
-                           prepared[0][1].n_buckets, stats)
-    return PreparedGraph(batch, layout, report, float(np.mean(cuts)),
-                         time.perf_counter() - t0)
+                           layouts[0].n_buckets, stats)
+    return PreparedGraph(batch, layout, report, cut, prep_seconds)
+
+
+def pad_graph_batch(prep: PreparedGraph, seq: int, mb: int,
+                    *, _shared: dict | None = None) -> PreparedGraph:
+    """Pad a multi-graph batch to a fixed (seq, mb) shape budget. Padding
+    is fully masked (feat 0, labels -1, block_idx -1, buckets
+    BUCKET_MASKED, dense_buckets -1) — numerically a no-op for the sparse
+    step and label-masked for the dense one — so every mini-batch and
+    every ladder rung of a graph-level task is shape-identical: the
+    Trainer's jitted steps trace once, re-layouts and ragged batches
+    included.
+
+    Arrays that need no padding keep their identity, and ``_shared``
+    (an id(original) -> padded cache, one dict per ladder) lets arrays
+    aliased across rungs stay aliased after padding — the elastic upload
+    dedup depends on it."""
+    lay = prep.layout
+    if seq < lay.seq_len or mb < lay.mb:
+        raise ValueError(f"pad budget ({seq}, {mb}) < layout "
+                         f"({lay.seq_len}, {lay.mb})")
+    if seq % lay.bq or seq % lay.bk:
+        raise ValueError(f"seq_pad {seq} not divisible by blocks "
+                         f"({lay.bq}, {lay.bk})")
+    if seq == lay.seq_len and mb == lay.mb:
+        return prep
+    ds, dq = seq - lay.seq_len, seq // lay.bq - lay.nq
+    dm = mb - lay.mb
+
+    def pad(arr, widths, cv=0):
+        if not any(w for _, w in widths):
+            return arr
+        if _shared is not None and id(arr) in _shared:
+            return _shared[id(arr)]
+        out = np.pad(arr, widths, constant_values=cv)
+        if _shared is not None:
+            _shared[id(arr)] = out
+        return out
+
+    b = prep.batch
+    batch = dict(b)
+    batch["feat"] = pad(b["feat"], ((0, 0), (0, ds), (0, 0)))
+    batch["in_deg"] = pad(b["in_deg"], ((0, 0), (0, ds)))
+    batch["out_deg"] = pad(b["out_deg"], ((0, 0), (0, ds)))
+    batch["labels"] = pad(b["labels"], ((0, 0), (0, ds)), cv=-1)
+    batch["block_idx"] = pad(b["block_idx"],
+                             ((0, 0), (0, dq), (0, dm)), cv=-1)
+    if "buckets" in b:
+        batch["buckets"] = pad(
+            b["buckets"], ((0, 0), (0, dq), (0, dm), (0, 0), (0, 0)),
+            cv=BUCKET_MASKED)
+    if "lap_pe" in b:
+        batch["lap_pe"] = pad(b["lap_pe"], ((0, 0), (0, ds), (0, 0)))
+    if "dense_buckets" in b:
+        batch["dense_buckets"] = pad(
+            b["dense_buckets"], ((0, 0), (0, ds), (0, ds)), cv=-1)
+    layout = ClusterLayout(seq, lay.bq, lay.bk, batch["block_idx"][0],
+                           batch.get("buckets", [None])[0], lay.n_buckets,
+                           lay.stats)
+    return PreparedGraph(batch, layout, prep.report, prep.cut,
+                         prep.prep_seconds)

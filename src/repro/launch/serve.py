@@ -113,7 +113,7 @@ class DecodeEngine:
                 "engine_steps": self.steps}
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_0_6b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -124,9 +124,16 @@ def main():
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--sparse", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "graph":
+        # graph transformers are encoders: model.decode is None, so the
+        # slot engine has nothing to drive — fail at the CLI boundary
+        # instead of a TypeError deep inside the decode loop
+        ap.error(f"--arch {args.arch}: graph-family archs have no "
+                 f"autoregressive decode path to serve; train them with "
+                 f"repro.launch.train (--task node|graph|link)")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = DecodeEngine(model, params, batch_slots=args.batch,

@@ -3,7 +3,11 @@
 ``build(cfg)`` returns a :class:`Model` exposing
 
 * ``param_defs`` / ``init(key)`` / ``abstract_params()``
-* ``loss(params, batch)``          -> (scalar, metrics)      [train]
+* ``loss_variants``: dict of named training losses, each
+  ``(params, batch) -> (scalar, metrics)``. Every family exposes
+  ``"sparse"`` (also reachable as ``model.loss``); the graph family adds
+  ``"dense"`` for the interleave step. Tasks (repro/tasks) select which
+  variants the Trainer jits.
 * ``prefill(params, batch)``       -> (logits, cache)        [prefill]
 * ``decode(params, cache, tokens, pos)`` -> (logits, cache)  [decode]
 * ``cache_defs(batch, seq_len)``   -> ParamDef tree for decode caches
@@ -84,14 +88,24 @@ def ssm_cache_defs(cfg, batch, seq_len):
 
 @dataclasses.dataclass
 class Model:
+    """Uniform model handle. Training losses are a *dict of variants*
+    keyed by name — ``"sparse"`` is the primary step every family exposes;
+    the graph family adds ``"dense"`` (the fully-connected interleave step,
+    paper §III-B). Tasks (repro/tasks) pick which variants to train and
+    the Trainer jits one step per variant, so new variants never grow
+    family-specific fields here."""
+
     cfg: Any
     param_defs: Any
-    loss: Callable          # (params, batch) -> (loss, metrics)
+    loss_variants: dict[str, Callable]  # name -> (params, batch) -> (loss, metrics)
     prefill: Callable       # (params, batch) -> (logits, cache)
     decode: Callable        # (params, cache, tokens, pos) -> (logits, cache)
     cache_defs: Callable    # (batch, seq_len) -> defs
-    # graph family: dense-interleave loss (paper §III-B); None elsewhere
-    loss_dense: Callable | None = None
+
+    @property
+    def loss(self) -> Callable:
+        """The primary ("sparse") training loss."""
+        return self.loss_variants["sparse"]
 
     def init(self, key):
         return nnp.init_tree(self.param_defs, key)
@@ -130,7 +144,7 @@ def build(cfg) -> Model:
         return Model(
             cfg=cfg,
             param_defs=LM.lm_defs(cfg),
-            loss=lambda p, b: LM.lm_loss(p, cfg, b),
+            loss_variants={"sparse": lambda p, b: LM.lm_loss(p, cfg, b)},
             prefill=lambda p, b: _lm_prefill_and_cache(p, cfg, b),
             decode=lambda p, c, t, pos, sparse=False:
                 LM.lm_decode_step(p, cfg, c, t, pos, sparse=sparse),
@@ -140,7 +154,7 @@ def build(cfg) -> Model:
         return Model(
             cfg=cfg,
             param_defs=HY.hybrid_defs(cfg),
-            loss=lambda p, b: HY.hybrid_loss(p, cfg, b),
+            loss_variants={"sparse": lambda p, b: HY.hybrid_loss(p, cfg, b)},
             prefill=lambda p, b: _hybrid_prefill(p, cfg, b),
             decode=lambda p, c, t, pos, sparse=False:
                 HY.hybrid_decode_step(p, cfg, c, t, pos, sparse=sparse),
@@ -150,7 +164,7 @@ def build(cfg) -> Model:
         return Model(
             cfg=cfg,
             param_defs=ssm_lm_defs(cfg),
-            loss=lambda p, b: ssm_lm_loss(p, cfg, b),
+            loss_variants={"sparse": lambda p, b: ssm_lm_loss(p, cfg, b)},
             prefill=lambda p, b: _ssm_prefill(p, cfg, b),
             decode=lambda p, c, t, pos, sparse=False:
                 ssm_lm_decode(p, cfg, c, t, pos, sparse=sparse),
@@ -160,7 +174,7 @@ def build(cfg) -> Model:
         return Model(
             cfg=cfg,
             param_defs=ED.encdec_defs(cfg),
-            loss=lambda p, b: ED.encdec_loss(p, cfg, b),
+            loss_variants={"sparse": lambda p, b: ED.encdec_loss(p, cfg, b)},
             prefill=lambda p, b: _encdec_prefill(p, cfg, b),
             decode=lambda p, c, t, pos, sparse=False:
                 ED.encdec_decode_step(p, cfg, c, t, pos, sparse=sparse),

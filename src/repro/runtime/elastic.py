@@ -1,155 +1,15 @@
-"""Elastic graph-training task: AutoTuner-driven re-reformation.
+"""Back-compat shim: the elastic graph task grew into the Task layer.
 
-This is the host-side half of the paper's elastic loop (§III-D) that the
-Trainer drives at epoch boundaries: the AutoTuner ladder, the per-rung
-re-layout through ``data/graph_pipeline.prepare_node_task``, and the
-shape-stable batch both jitted steps consume.
-
-Shape stability is the whole design: at construction every ladder rung's
-layout is built once through ``prepare_node_task(beta_thre=rung)`` and
-cached, and the ``mb`` (selected-k-block) axis of ``block_idx``/``buckets``
-is padded to the max across the ladder. A ladder move therefore swaps
-array *contents* only — the Trainer's two jitted steps (sparse + dense)
-are traced exactly once each for the whole run, re-layouts included. The
-eager probe also means a move costs an array upload, not a re-clustering:
-the paper's "preprocessing amortized over training" taken to its limit.
-
-This composes unchanged with the sharded path
-(``parallel/cluster_parallel.sharded_cluster_attention``): S is constant
-across rungs and whole-block (``S % bq == 0``), and the pattern operands
-are replicated inside the shard_map (every device holds the full sequence
-post-a2a), so the same ``block_idx``/``buckets`` drive the Ulysses
-sequence-sharded attention at any rung.
-
-``state_dict``/``load_state_dict`` round-trip the tuner position,
-``beta_thre`` and current layout stats through the checkpoint manifest
-(``Checkpointer.save(extra=...)``) so an elastic restart resumes the
-ladder instead of resetting it.
+``ElasticGraphTask`` (PR 3) became ``repro.tasks.NodeTask`` — the same
+AutoTuner-driven re-reformation with the same shape-stable ladder prep,
+now one of several tasks behind the generic ``repro.tasks.Task`` protocol
+(node-level, graph-level, link prediction). Import from ``repro.tasks``
+in new code; this module keeps the old spelling working.
 """
 
-from __future__ import annotations
+from repro.tasks.elastic import LadderMove
+from repro.tasks.node import NodeTask
 
-import dataclasses
+ElasticGraphTask = NodeTask
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.auto_tuner import AutoTuner
-from repro.data.graph_pipeline import pad_layout_mb, prepare_node_task_ladder
-
-
-@dataclasses.dataclass
-class LadderMove:
-    step: int           # trainer step after which the move happened
-    pos: int            # new ladder position
-    beta_thre: float    # new transfer threshold
-    ldr: float          # the LDR value that triggered the move
-
-
-class ElasticGraphTask:
-    """Single-graph node-classification task with an elastic layout.
-
-    The Trainer calls ``batch()`` every step (current rung's arrays,
-    shape-identical across rungs) and ``on_epoch(loss, seconds, step)`` at
-    each epoch boundary; a ladder move swaps the active rung.
-    """
-
-    def __init__(self, g, cfg, *, train_mask=None, bq: int = 32,
-                 bk: int = 32, d_b: int = 8, delta: int = 10,
-                 seed: int = 0):
-        self.cfg = cfg
-        self.g = g
-        self.tuner = AutoTuner(beta_g=g.sparsity, delta=delta)
-        # probe every rung once — deduping equal thresholds (the top of
-        # the ladder can collapse to 1.0 on dense graphs) and sharing the
-        # rung-invariant prep (reorder, conditions, SPD/LapPE, features)
-        betas = list(dict.fromkeys(self.tuner.ladder))
-        preps = dict(zip(betas, prepare_node_task_ladder(
-            g, cfg, betas, bq=bq, bk=bk, d_b=d_b, train_mask=train_mask,
-            with_dense_buckets=True, seed=seed)))
-        seqs = {p.layout.seq_len for p in preps.values()}
-        if len(seqs) != 1:  # deterministic prep => can't happen; be loud
-            raise AssertionError(f"re-layout changed seq_len: {seqs}")
-        self.mb_cap = max(p.layout.mb for p in preps.values())
-        self._preps = {bt: pad_layout_mb(p, self.mb_cap)
-                       for bt, p in preps.items()}
-        self._batches: dict[float, dict] = {}
-        self._uploads: dict[int, object] = {}  # id(host arr) -> device arr
-        self.moves: list[LadderMove] = []
-        self.prep_seconds = sum(p.prep_seconds for p in preps.values())
-
-    # ------------------------------------------------------------ state
-
-    @property
-    def beta_thre(self) -> float:
-        return self.tuner.beta_thre
-
-    @property
-    def prep(self):
-        """The active rung's PreparedGraph (mb-padded)."""
-        return self._preps[self.tuner.beta_thre]
-
-    @property
-    def conditions_ok(self) -> bool:
-        return self.prep.report.ok
-
-    @property
-    def layout(self):
-        return self.prep.layout
-
-    def batch(self) -> dict:
-        """jnp-ready batch of the active rung — includes ``dense_buckets``
-        for the dense interleave step. Cached per rung, and uploads are
-        deduped by host-array identity: the rung-invariant arrays (feat,
-        degrees, labels, lap_pe) are aliased across rungs by
-        prepare_node_task_ladder and live on device exactly once; a
-        ladder move uploads only the pattern arrays, never retraces."""
-        bt = self.tuner.beta_thre
-        if bt not in self._batches:
-            dev = {}
-            for k, v in self._preps[bt].batch.items():
-                key = id(v)
-                if key not in self._uploads:
-                    self._uploads[key] = jnp.asarray(v)
-                dev[k] = self._uploads[key]
-            self._batches[bt] = dev
-        return self._batches[bt]
-
-    # ------------------------------------------------------------ loop
-
-    def on_epoch(self, loss: float, epoch_seconds: float,
-                 step: int) -> bool:
-        """Feed one epoch's (mean loss, wall seconds) to the AutoTuner;
-        returns True iff the ladder moved (the next ``batch()`` serves the
-        new rung's layout)."""
-        before = self.tuner.pos
-        self.tuner.update(float(loss), float(epoch_seconds))
-        if self.tuner.pos == before:
-            return False
-        self.moves.append(LadderMove(step=step, pos=self.tuner.pos,
-                                     beta_thre=self.tuner.beta_thre,
-                                     ldr=float(self.tuner._ldr[-1])))
-        return True
-
-    # ------------------------------------------------------- durability
-
-    def state_dict(self) -> dict:
-        stats = {k: (int(v) if isinstance(v, (int, np.integer)) else
-                     float(v))
-                 for k, v in self.layout.stats.items()}
-        return {"tuner": self.tuner.state_dict(),
-                "mb_cap": int(self.mb_cap),
-                "layout_stats": stats,
-                "moves": [dataclasses.asdict(m) for m in self.moves]}
-
-    def load_state_dict(self, d: dict) -> None:
-        self.tuner.load_state_dict(d["tuner"])
-        if int(d["mb_cap"]) != self.mb_cap:
-            raise ValueError(
-                f"checkpoint mb capacity {d['mb_cap']} != this run's "
-                f"{self.mb_cap}: graph or prep knobs changed under restart")
-        if self.tuner.beta_thre not in self._preps:
-            raise ValueError(
-                f"checkpoint ladder rung {self.tuner.beta_thre} has no "
-                f"prepared layout: graph changed under restart")
-        self.moves = [LadderMove(**m) for m in d.get("moves", [])]
+__all__ = ["ElasticGraphTask", "LadderMove", "NodeTask"]

@@ -1,9 +1,9 @@
-"""Fault-tolerant training loop.
+"""Fault-tolerant training loop, generic over the Task protocol.
 
 Production concerns implemented (and unit-tested at CPU scale):
 
-* step-granular checkpoint/restart — data stream is seekable (step ->
-  batch is pure), so a restart replays nothing and skips nothing;
+* step-granular checkpoint/restart — tasks are seekable (step -> batch is
+  pure), so a restart replays nothing and skips nothing;
 * async checkpoints every `ckpt_every` steps + graceful save on
   preemption (SIGTERM) and on uncaught worker failure;
 * failure injection hook (`fail_at_step`) for restart tests;
@@ -14,17 +14,29 @@ Production concerns implemented (and unit-tested at CPU scale):
   come from the current run's recipe, not the saved one);
 * kernel dispatch: ``TrainerConfig.attn_impl`` routes every attention/SSD
   op in the jitted step through repro.kernels.ops (oracle / Pallas
-  interpret / Pallas compiled) — no call-site edits anywhere in the model;
-* elastic graph training (paper §III-B/D): pass an
-  ``runtime.elastic.ElasticGraphTask`` and the loop closes the paper's
-  dynamic-optimization claim — every ``elastic_every`` steps the epoch's
-  (mean loss, wall time) feed the AutoTuner, a ladder move swaps in the
-  re-reformed layout host-side (shape-stable, zero retraces), and every
-  ``interleave_period``-th step runs the *dense* jitted step
-  (fully-connected attention biased from the layout) instead of the
-  sparse one. Exactly two step traces exist for the whole run. Tuner
-  position / beta_thre / layout stats ride in the checkpoint manifest, so
-  an elastic restart resumes the ladder instead of resetting it.
+  interpret / Pallas compiled) — no call-site edits anywhere in the model.
+
+All workload behavior enters through the ``repro.tasks.Task`` protocol —
+the Trainer has no model-family or graph-specific branches:
+
+* the task's ``loss_variants`` each get ONE jitted step (an elastic graph
+  run traces exactly two: sparse + dense — never more, re-layouts
+  included, because tasks keep their batches shape-stable);
+* ``task.variant(step, interleave_period)`` is the dual-interleave
+  schedule (paper §III-B) — keyed off the absolute step, so the cadence
+  survives restart;
+* every ``elastic_every`` steps the epoch's (mean loss, wall time) feed
+  ``task.on_epoch`` (paper §III-D: the AutoTuner ladder / re-reformation
+  for elastic tasks, a no-op for streams);
+* ``task.state_dict()`` rides in the checkpoint manifest
+  (``Checkpointer.save(extra=...)``), so an elastic restart resumes the
+  ladder instead of resetting it;
+* passing ``mesh``/``recipe`` runs every variant's step under the mesh —
+  node-level, graph-level and link tasks all hit the sharded
+  cluster-sparse path (``parallel/cluster_parallel``) identically.
+
+A plain ``batch_fn`` is wrapped into a ``BatchFnTask``, so the LM
+families flow through the identical loop.
 """
 
 from __future__ import annotations
@@ -41,10 +53,10 @@ import numpy as np
 
 from repro import compat
 from repro.ckpt.checkpoint import Checkpointer
-from repro.core.dual_attention import use_dense_step
 from repro.kernels import ops as kernel_ops
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.parallel.axes import axis_rules
+from repro.tasks.base import BatchFnTask
 
 
 @dataclasses.dataclass
@@ -64,9 +76,9 @@ class TrainerConfig:
     # auto = Pallas-compiled on TPU / jnp oracle elsewhere; ref / interpret /
     # compiled force a path. REPRO_FORCE_PALLAS* env vars still win.
     attn_impl: str = "auto"
-    # elastic graph training (needs an ElasticGraphTask):
+    # task schedule knobs (consumed through the Task protocol):
     interleave_period: int = 0   # dense step every k steps (0 = never)
-    elastic_every: int = 0       # steps per tuner epoch (0 = frozen layout)
+    elastic_every: int = 0       # steps per task epoch (0 = frozen layout)
     # crash rescue: refresh an undonated host copy of the state every k
     # steps so the crash-consistent save survives donated-buffer deletion
     # when the jitted step itself dies mid-call (0 = off). Each refresh is
@@ -89,17 +101,20 @@ class Trainer:
     def __init__(self, model, cfg: TrainerConfig,
                  batch_fn: Callable[[int], Any] | None = None,
                  *, mesh=None, recipe=None, donate: bool = True,
-                 elastic=None):
+                 task=None, elastic=None):
         self.model = model
         self.cfg = cfg
-        self.batch_fn = batch_fn
         self.mesh = mesh
         self.recipe = recipe
-        # elastic graph mode: an ElasticGraphTask supplies the (re-layable)
-        # batch instead of batch_fn and absorbs epoch (loss, time) signals
-        self.elastic = elastic
-        if batch_fn is None and elastic is None:
-            raise ValueError("need batch_fn or an elastic task")
+        # one Task supplies batches, losses and the step schedule; a bare
+        # batch_fn becomes the trivial stream task (``elastic`` is the
+        # pre-Task spelling of the same keyword)
+        task = task if task is not None else elastic
+        if task is None:
+            if batch_fn is None:
+                raise ValueError("need batch_fn or a task")
+            task = BatchFnTask(batch_fn)
+        self.task = task.prepare(model)
         # route every kernel call in the jitted step through the dispatch
         # layer: one config knob selects oracle / interpret / compiled
         # everywhere, including inside shard_map (kernels/ops.py)
@@ -136,13 +151,30 @@ class Trainer:
 
             return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
 
-        self._step = make_step(self.model.loss)
-        # the dual-interleave branch: a SECOND jitted step (dense
-        # attention through the same dispatch layer), selected per step
-        # host-side by use_dense_step — two traces total, never more
-        self._step_dense = None
-        if elastic is not None and getattr(model, "loss_dense", None):
-            self._step_dense = make_step(self.model.loss_dense)
+        # ONE jitted step per task loss variant — the whole run traces
+        # len(variants) programs (two for dual-interleave tasks), however
+        # often the task re-lays out: variants select per step host-side
+        self._steps = {name: make_step(fn)
+                       for name, fn in self.task.loss_variants.items()}
+
+    # back-compat spellings for the variant steps (tests/benchmarks
+    # introspect trace counts through these)
+    @property
+    def _step(self):
+        return self._steps["sparse"]
+
+    @_step.setter
+    def _step(self, fn):
+        self._steps["sparse"] = fn
+
+    @property
+    def _step_dense(self):
+        return self._steps.get("dense")
+
+    @property
+    def elastic(self):
+        """Pre-Task alias for the bound task."""
+        return self.task
 
     def _mesh_ctx(self):
         """Ambient-mesh context for step execution — the distributed trainer
@@ -165,22 +197,24 @@ class Trainer:
             return self.init_state(seed), 0
         state = self.ckpt.restore(latest)
         state["step"] = jnp.asarray(state["step"], jnp.int32)
-        if self.elastic is not None:
-            extra = self.ckpt.load_extra(latest)
-            if extra and "elastic" in extra:
-                self.elastic.load_state_dict(extra["elastic"])
+        extra = self.ckpt.load_extra(latest)
+        if extra:
+            # "elastic" is the pre-Task manifest key; keep restoring it
+            sd = extra.get("task") or extra.get("elastic")
+            if sd:
+                self.task.load_state_dict(sd)
         return state, latest
 
     def _ckpt_extra(self):
-        if self.elastic is None:
-            return None
-        return {"elastic": self.elastic.state_dict()}
+        sd = self.task.state_dict()
+        return {"task": sd} if sd else None
 
     # ------------------------------------------------------------ loop
 
     def run(self, seed: int = 0):
         state, start = self.restore_or_init(seed)
         cfg = self.cfg
+        task = self.task
 
         old = signal.getsignal(signal.SIGTERM)
 
@@ -193,7 +227,6 @@ class Trainer:
             pass  # not main thread
 
         ema = None
-        task = self.elastic
         # rescue only matters when donation can delete buffers mid-call;
         # sharded state is left to the periodic checkpoints (device_get of
         # non-addressable arrays is not portable)
@@ -206,19 +239,13 @@ class Trainer:
                 if step == cfg.fail_at_step:
                     raise RuntimeError(f"injected failure at step {step}")
                 t0 = time.perf_counter()
-                dense = False
-                if task is not None:
-                    # dual-interleave schedule (absolute step -> cadence
-                    # survives restart); conditions failing forces dense
-                    dense = self._step_dense is not None and use_dense_step(
-                        step, cfg.interleave_period, task.conditions_ok)
-                    batch = task.batch()
-                else:
-                    batch = {k: jnp.asarray(v)
-                             for k, v in self.batch_fn(step).items()}
-                fn = self._step_dense if dense else self._step
+                # the task owns the schedule (dual-interleave for graph
+                # tasks, always-"sparse" for streams); absolute step ->
+                # cadence survives restart
+                variant = task.variant(step, cfg.interleave_period)
+                batch = task.batches(step)
                 with self._mesh_ctx():
-                    state, metrics = fn(state, batch)
+                    state, metrics = self._steps[variant](state, batch)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 dt = time.perf_counter() - t0
                 if step - start >= 2:  # skip compile-dominated warmup steps
@@ -228,16 +255,15 @@ class Trainer:
                             dt > cfg.straggler_factor * prev_ema:
                         self.stragglers.append(
                             StragglerReport(step, dt, prev_ema))
-                rec = {"step": step + 1, **metrics, "seconds": dt}
-                if task is not None:
-                    rec["dense"] = dense
-                    rec["beta_thre"] = task.beta_thre
+                rec = {"step": step + 1, **metrics, "seconds": dt,
+                       "variant": variant, "dense": variant == "dense",
+                       **task.log_extras()}
                 self.history.append(rec)
                 if rescue_on and (step + 1) % cfg.rescue_every == 0:
                     # undonated host copy: the crash save below must not
-                    # touch buffers the next _step call donates away
+                    # touch buffers the next step call donates away
                     self._rescue = (step + 1, jax.device_get(state))
-                if task is not None and cfg.elastic_every > 0:
+                if cfg.elastic_every > 0:
                     # compile-dominated warmup steps would poison the LDR
                     # denominator (the straggler EMA skips them too)
                     if step - start >= 2:
@@ -273,7 +299,7 @@ class Trainer:
                 pass
 
     def _crash_save(self, state):
-        """Rescue checkpoint after an uncaught failure. When ``_step``
+        """Rescue checkpoint after an uncaught failure. When the step
         raised mid-call its donated inputs are deleted — ``state`` then
         points at dead buffers, so fall back to the last undonated host
         copy (``rescue_every``) instead of crashing the rescue itself."""

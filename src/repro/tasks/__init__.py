@@ -1,0 +1,22 @@
+"""First-class Task API: one protocol for node-level, graph-level and
+link-prediction training — elastic, interleaved and sharded for every
+task. See tasks/base.py for the protocol contract."""
+
+from repro.tasks.base import BatchFnTask, Task
+from repro.tasks.elastic import ElasticTask, LadderMove
+from repro.tasks.graph_level import (GraphLevelTask,
+                                     synthetic_graph_level_dataset)
+from repro.tasks.link import LinkTask, link_loss
+from repro.tasks.node import NodeTask
+
+__all__ = [
+    "BatchFnTask",
+    "ElasticTask",
+    "GraphLevelTask",
+    "LadderMove",
+    "LinkTask",
+    "NodeTask",
+    "Task",
+    "link_loss",
+    "synthetic_graph_level_dataset",
+]

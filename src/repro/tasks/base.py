@@ -1,0 +1,136 @@
+"""The Task protocol: one contract between workloads and the runtime.
+
+TorchGT's pipeline (dual-interleaved attention, elastic reformation,
+cluster-aware parallelism) is workload-agnostic in the paper — it trains
+node-level and graph-level workloads through the same system. This module
+is the code-side spelling of that: a ``Task`` owns everything
+workload-specific and the ``Trainer`` consumes *only* this protocol —
+
+* ``prepare(model) -> self``   bind the model handle, build layouts
+                               (idempotent; constructors do the heavy prep)
+* ``batches(step) -> dict``    the jnp-ready batch for an absolute step
+                               (pure in ``step``: restarts replay nothing)
+* ``loss_variants``            ``{"sparse": fn, ...}`` — the named losses
+                               this task trains; the Trainer jits ONE step
+                               per variant (the two-traced-steps invariant)
+* ``variant(step, period)``    which variant this step runs (the
+                               dual-interleave schedule lives here)
+* ``on_epoch(loss, s, step)``  epoch-boundary signal (AutoTuner feeding)
+* ``eval(params) -> metrics``  task-defined held-out evaluation
+* ``state_dict`` / ``load_state_dict``  durable task state for the
+                               checkpoint manifest
+* ``log_extras() -> dict``     per-step scalars for the history record
+
+Concrete tasks: ``NodeTask`` (single-graph node classification,
+repro/tasks/node.py), ``GraphLevelTask`` (batched mini-graphs,
+repro/tasks/graph_level.py), ``LinkTask`` (edge scoring with negative
+sampling, repro/tasks/link.py), and ``BatchFnTask`` (below) wrapping any
+``step -> batch`` stream (the LM families).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.core.dual_attention import use_dense_step
+
+
+def _model_loss_variants(model) -> dict[str, Callable]:
+    """A model's named losses; duck-typed so hand-rolled test doubles that
+    only expose ``.loss`` keep working."""
+    lv = getattr(model, "loss_variants", None)
+    return dict(lv) if lv else {"sparse": model.loss}
+
+
+class Task:
+    """Protocol base with shared no-op defaults: a minimal task only
+    implements ``batches``. Default loss variants come from the bound
+    model; the default schedule interleaves the ``"dense"`` variant (when
+    the model has one) every ``period`` steps, forcing it when the C1-C3
+    condition check failed — paper §III-B, now workload-generic."""
+
+    name: str = "task"
+    model: Any = None
+
+    # ------------------------------------------------------------ binding
+
+    def prepare(self, model) -> "Task":
+        """Bind the model handle (layout prep happens in constructors and
+        must be idempotent under repeated prepare calls)."""
+        cfg = getattr(self, "cfg", None)
+        mcfg = getattr(model, "cfg", None)
+        if cfg is not None and mcfg is not None and mcfg != cfg:
+            raise ValueError(
+                f"task prepared for config {cfg.name!r} but the model was "
+                f"built from {mcfg.name!r}")
+        self.model = model
+        return self
+
+    # ------------------------------------------------------------ data
+
+    def batches(self, step: int) -> dict:
+        raise NotImplementedError
+
+    # ------------------------------------------------------ loss/schedule
+
+    @property
+    def loss_variants(self) -> dict[str, Callable]:
+        return _model_loss_variants(self.model)
+
+    @property
+    def conditions_ok(self) -> bool:
+        return True
+
+    def variant(self, step: int, interleave_period: int) -> str:
+        if "dense" in self.loss_variants and use_dense_step(
+                step, interleave_period, self.conditions_ok):
+            return "dense"
+        return "sparse"
+
+    # ------------------------------------------------------------ elastic
+
+    def on_epoch(self, loss: float, epoch_seconds: float,
+                 step: int) -> bool:
+        """Epoch-boundary feed; returns True iff the task re-laid out."""
+        return False
+
+    def log_extras(self) -> dict:
+        """Extra per-step scalars recorded in ``Trainer.history``."""
+        return {}
+
+    # --------------------------------------------------------------- eval
+
+    def eval(self, params) -> dict:
+        return {}
+
+    # ---------------------------------------------------------- durability
+
+    def state_dict(self) -> dict:
+        """Durable task state for the checkpoint manifest ({} = none)."""
+        return {}
+
+    def load_state_dict(self, d: dict) -> None:
+        pass
+
+
+class BatchFnTask(Task):
+    """The trivial task: a seekable ``step -> host batch`` stream and the
+    model's primary ("sparse") loss. This is what ``Trainer(model, cfg,
+    batch_fn)`` wraps, so the LM families enter the runtime through the
+    same protocol as the graph tasks."""
+
+    name = "stream"
+
+    def __init__(self, batch_fn: Callable[[int], dict]):
+        self.batch_fn = batch_fn
+
+    def batches(self, step: int) -> dict:
+        return {k: jnp.asarray(v) for k, v in self.batch_fn(step).items()}
+
+    @property
+    def loss_variants(self) -> dict[str, Callable]:
+        # streams train the primary variant only: the interleave schedule
+        # belongs to tasks that own a layout to interleave against
+        return {"sparse": _model_loss_variants(self.model)["sparse"]}

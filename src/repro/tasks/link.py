@@ -1,0 +1,137 @@
+"""Link-prediction task: edge scoring with negative sampling.
+
+A new workload on the same machinery: the graph transformer encodes the
+(cluster-reordered) node sequence exactly as the node task does — elastic
+ladder, dual-interleave, sharded attention all included — and the loss
+scores node pairs by the scaled dot product of their final hidden states,
+binary cross-entropy against sampled positives (real edges) vs negatives
+(uniform random pairs).
+
+Pair sampling is pure in ``step`` (seeded by ``(seed, step)``), so a
+restart replays the exact pair stream; the pair arrays have a fixed shape
+``(n_pairs,)``, so fresh samples every step never retrace. A held-out
+edge set (``eval_frac``, split on *undirected* pairs so the symmetrized
+reverse edge cannot leak into training) is excluded from the per-step
+positive sampling and scored by ``eval(params)`` against fresh
+negatives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph_model import graph_forward, with_dense_bias
+from repro.tasks.node import NodeTask
+
+F32 = jnp.float32
+
+
+def link_loss(p, cfg, batch, dense: bool = False):
+    """Dot-product edge scoring over the task's pair arrays:
+    ``pair_src``/``pair_dst`` are sequence positions (node order already
+    shifted by ``n_global``), ``pair_y`` in {0, 1}."""
+    h = graph_forward(p, cfg, batch, dense)
+    hn = h[0].astype(F32)                       # (S, D); link graphs are B=1
+    u = jnp.take(hn, batch["pair_src"], axis=0)
+    w = jnp.take(hn, batch["pair_dst"], axis=0)
+    logits = (u * w).sum(-1) / np.sqrt(hn.shape[-1])
+    y = batch["pair_y"].astype(F32)
+    loss = jnp.mean(jax.nn.softplus(logits) - y * logits)  # BCE with logits
+    acc = jnp.mean(((logits > 0) == (y > 0.5)).astype(F32))
+    return loss, {"xent": loss, "acc": acc}
+
+
+class LinkTask(NodeTask):
+    """Edge scoring with negative sampling on a single graph.
+
+    Reuses the node task's elastic ladder prep wholesale (the encoder
+    input is identical); only the loss head and the per-step pair stream
+    differ — which is the point of the Task protocol."""
+
+    name = "link"
+
+    def __init__(self, g, cfg, *, n_pairs: int = 256,
+                 eval_frac: float = 0.1, bq: int = 32, bk: int = 32,
+                 d_b: int = 8, delta: int = 10, seed: int = 0):
+        super().__init__(g, cfg, bq=bq, bk=bk, d_b=d_b, delta=delta,
+                         seed=seed)
+        self.n_pairs = int(n_pairs)
+        self.seed = seed
+        ng = cfg.n_global
+        inv = np.empty(g.n, np.int64)
+        inv[self.prep.perm] = np.arange(g.n)
+        pos_src = (inv[g.src] + ng).astype(np.int32)
+        pos_dst = (inv[g.dst] + ng).astype(np.int32)
+        # split on UNDIRECTED pairs: the graphs are symmetrized and the
+        # dot-product score is symmetric, so holding out (u, v) while
+        # training on (v, u) would leak every eval edge into training
+        rng = np.random.default_rng(seed)
+        lo = np.minimum(pos_src, pos_dst).astype(np.int64)
+        hi = np.maximum(pos_src, pos_dst).astype(np.int64)
+        key = lo * (ng + g.n + 1) + hi
+        uniq, first = np.unique(key, return_index=True)
+        perm_u = rng.permutation(len(uniq))
+        n_eval = max(1, int(len(uniq) * eval_frac))
+        held = perm_u[:n_eval]
+        is_eval = np.isin(key, uniq[held])
+        if is_eval.all():
+            raise ValueError("eval_frac leaves no training edges")
+        self._train_edges = (pos_src[~is_eval], pos_dst[~is_eval])
+        # one representative direction per held-out undirected pair
+        rep = first[held]
+        self._eval_edges = (pos_src[rep], pos_dst[rep])
+        self._node_lo, self._node_hi = ng, ng + g.n
+
+    # ------------------------------------------------------------ data
+
+    def _sample_pairs(self, rng, es, ed, k: int):
+        """k positives from the edge list + k uniform-random negatives."""
+        idx = rng.integers(0, len(es), k)
+        neg_s = rng.integers(self._node_lo, self._node_hi, k)
+        neg_d = rng.integers(self._node_lo, self._node_hi, k)
+        src = np.concatenate([es[idx], neg_s]).astype(np.int32)
+        dst = np.concatenate([ed[idx], neg_d]).astype(np.int32)
+        y = np.concatenate([np.ones(k, np.int32), np.zeros(k, np.int32)])
+        return src, dst, y
+
+    def batches(self, step: int) -> dict:
+        b = dict(super().batches(step))
+        rng = np.random.default_rng([self.seed, step])  # pure in step
+        src, dst, y = self._sample_pairs(rng, *self._train_edges,
+                                         self.n_pairs // 2)
+        b["pair_src"] = jnp.asarray(src)
+        b["pair_dst"] = jnp.asarray(dst)
+        b["pair_y"] = jnp.asarray(y)
+        return b
+
+    # ------------------------------------------------------------ losses
+
+    @property
+    def loss_variants(self):
+        cfg = self.cfg
+        return {
+            "sparse": lambda p, b: link_loss(p, cfg, b, dense=False),
+            "dense": lambda p, b: link_loss(
+                p, cfg, with_dense_bias(p, cfg, b), dense=True),
+        }
+
+    # -------------------------------------------------------------- eval
+
+    def eval(self, params) -> dict:
+        """BCE/accuracy on the held-out edges vs fresh negatives."""
+        rng = np.random.default_rng([self.seed + 1, 0])
+        es, ed = self._eval_edges
+        k = len(es)
+        neg_s = rng.integers(self._node_lo, self._node_hi, k)
+        neg_d = rng.integers(self._node_lo, self._node_hi, k)
+        b = dict(self.batches(0))
+        b["pair_src"] = jnp.asarray(np.concatenate([es, neg_s])
+                                    .astype(np.int32))
+        b["pair_dst"] = jnp.asarray(np.concatenate([ed, neg_d])
+                                    .astype(np.int32))
+        b["pair_y"] = jnp.asarray(np.concatenate(
+            [np.ones(k, np.int32), np.zeros(k, np.int32)]))
+        return {k_: float(v)
+                for k_, v in self._metrics_fn()(params, b).items()}

@@ -227,3 +227,104 @@ def test_pad_layout_mb_is_masked_noop():
                                   prep.layout.block_idx)
     with pytest.raises(ValueError, match="mb_pad"):
         pad_layout_mb(prep, mb0 - 1)
+
+
+def test_graph_task_ragged_batch_single_node_and_oversized():
+    """prepare_graph_task edge cases: a single-node graph, a graph whose
+    sequence exceeds one bq block, and a tiny graph all pack into one
+    shape-consistent batch with fully-masked padding."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core.graph import Graph
+    from repro.core.graph_model import graph_loss
+    from repro.data.graph_pipeline import prepare_graph_task
+    from repro.models import build
+
+    cfg = get_smoke_config("graphormer_slim")
+    g1 = Graph(1, np.zeros(0, np.int32), np.zeros(0, np.int32),
+               feat=np.ones((1, cfg.feat_dim), np.float32),
+               labels=np.zeros(1, np.int32))
+    gbig = sbm_graph(70, 2, 0.2, 0.01, feat_dim=cfg.feat_dim,
+                     n_classes=0, seed=3)
+    gbig.labels = np.full(gbig.n, 1, np.int32)
+    gsmall = sbm_graph(12, 1, 0.3, 0.0, feat_dim=cfg.feat_dim,
+                       n_classes=0, seed=4)
+    gsmall.labels = np.zeros(gsmall.n, np.int32)
+    bq = 16
+    prep = prepare_graph_task([g1, gbig, gsmall], cfg, bq=bq, bk=bq, d_b=8)
+    S = prep.layout.seq_len
+    assert S % bq == 0 and S >= gbig.n + cfg.n_global  # ragged pad up
+    for k, v in prep.batch.items():
+        assert v.shape[0] == 3, k
+    # per-graph padding is fully masked: the single-node row has exactly
+    # its own + the global token's features, labels only at position 0
+    ng = cfg.n_global
+    assert (prep.batch["feat"][0, ng + 1:] == 0).all()
+    assert (prep.batch["labels"][:, 1:] == -1).all()
+    assert (prep.batch["labels"][:, 0] == [0, 1, 0]).all()
+    # and the packed batch trains: finite loss, finite grads
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = {k: jnp.asarray(v) for k, v in prep.batch.items()}
+    loss, _ = jax.jit(lambda p, bb: graph_loss(p, cfg, bb))(params, b)
+    assert np.isfinite(float(loss))
+
+
+def test_graph_task_all_masked_labels_no_nan():
+    """An all--1 label batch must hit the mask.sum() guard: loss 0, never
+    NaN (and the gradient stays finite)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core.graph_model import graph_loss
+    from repro.data.graph_pipeline import prepare_graph_task
+    from repro.models import build
+
+    cfg = get_smoke_config("graphormer_slim")
+    g = sbm_graph(20, 2, 0.3, 0.01, feat_dim=cfg.feat_dim, n_classes=0,
+                  seed=5)
+    g.labels = np.full(g.n, -1, np.int32)
+    prep = prepare_graph_task([g, g], cfg, bq=16, bk=16, d_b=8)
+    assert (prep.batch["labels"] == -1).all()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = {k: jnp.asarray(v) for k, v in prep.batch.items()}
+    (loss, _), grads = jax.jit(jax.value_and_grad(
+        lambda p, bb: graph_loss(p, cfg, bb), has_aux=True))(params, b)
+    assert float(loss) == 0.0
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_pad_graph_batch_budget_is_masked_noop():
+    """pad_graph_batch: a bigger (seq, mb) budget must not change the
+    sparse loss — padding rows/blocks are fully masked."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core.graph_model import graph_loss
+    from repro.data.graph_pipeline import pad_graph_batch, prepare_graph_task
+    from repro.models import build
+
+    cfg = get_smoke_config("graphormer_slim")
+    graphs = [sbm_graph(30 + 8 * i, 2, 0.2, 0.01, feat_dim=cfg.feat_dim,
+                        n_classes=cfg.n_classes, seed=i) for i in range(2)]
+    prep = prepare_graph_task(graphs, cfg, bq=16, bk=16, d_b=8,
+                              with_dense_buckets=True)
+    padded = pad_graph_batch(prep, prep.layout.seq_len + 32,
+                             prep.layout.mb + 2)
+    assert padded.layout.seq_len == prep.layout.seq_len + 32
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    loss_fn = jax.jit(lambda p, bb: graph_loss(p, cfg, bb)[0])
+    l0 = float(loss_fn(params,
+                       {k: jnp.asarray(v) for k, v in prep.batch.items()}))
+    l1 = float(loss_fn(params,
+                       {k: jnp.asarray(v) for k, v in padded.batch.items()}))
+    assert abs(l0 - l1) < 1e-5, (l0, l1)
+    with pytest.raises(ValueError, match="budget"):
+        pad_graph_batch(prep, prep.layout.seq_len - 16, prep.layout.mb)

@@ -48,6 +48,40 @@ def test_readme_documents_elastic_knobs():
         assert flag in readme, f"README.md does not document {flag}"
 
 
+def test_readme_task_matrix_names_every_task():
+    """The README task-capability matrix must name every Task subclass
+    that lives in src/repro/tasks/ (plus the protocol base itself), so a
+    new task cannot ship undocumented."""
+    import repro.tasks  # noqa: F401  (registers all subclasses)
+    from repro.tasks.base import Task
+
+    def subclasses(c):
+        out = set()
+        for s in c.__subclasses__():
+            out.add(s)
+            out |= subclasses(s)
+        return out
+
+    names = {c.__name__ for c in subclasses(Task)
+             if c.__module__.startswith("repro.tasks")} | {"Task"}
+    assert {"NodeTask", "GraphLevelTask", "LinkTask"} <= names
+    readme = (ROOT / "README.md").read_text()
+    missing = [n for n in sorted(names) if f"`{n}`" not in readme]
+    assert not missing, (
+        f"README.md task matrix is missing Task subclasses: {missing}")
+
+
+def test_readme_documents_task_cli_knob():
+    """--task is public surface: the README must document it and the
+    choices must match launch/train.py."""
+    train_src = (ROOT / "src" / "repro" / "launch" / "train.py").read_text()
+    readme = (ROOT / "README.md").read_text()
+    assert '"--task"' in train_src or "'--task'" in train_src
+    assert "--task" in readme
+    for choice in ("node", "graph", "link"):
+        assert choice in readme
+
+
 def test_readme_documents_dispatch_knobs():
     """The dispatch env knobs are part of the public surface; the README
     must name each one that kernels/ops.py actually reads."""

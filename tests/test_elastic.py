@@ -18,6 +18,7 @@ from repro.core.graph import sbm_graph
 from repro.models import build
 from repro.parallel.cluster_parallel import can_shard_cluster
 from repro.runtime.elastic import ElasticGraphTask
+from repro.tasks import NodeTask
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 
@@ -26,6 +27,11 @@ def _mk_task(n=128, delta=2, seed=0):
     g = sbm_graph(n, 4, p_in=0.05, p_out=0.003, feat_dim=cfg.feat_dim,
                   n_classes=cfg.n_classes, seed=seed)
     return cfg, ElasticGraphTask(g, cfg, bq=16, bk=16, d_b=8, delta=delta)
+
+
+def test_elastic_graph_task_is_node_task():
+    """The pre-Task spelling must stay importable and BE the NodeTask."""
+    assert ElasticGraphTask is NodeTask
 
 
 def _mk_trainer(cfg, task, ckpt_dir, steps=24, *, interleave=5,
@@ -96,9 +102,9 @@ def test_tuner_state_survives_restart(tmp_path):
     assert task2.moves[:saved_moves] == task.moves
     ck = Checkpointer(str(d))
     extra = ck.load_extra(ck.latest_step())
-    assert extra["elastic"]["tuner"]["pos"] == task2.tuner.pos
-    assert "layout_stats" in extra["elastic"]
-    assert extra["elastic"]["tuner"]["ladder"][saved_pos] == pytest.approx(
+    assert extra["task"]["tuner"]["pos"] == task2.tuner.pos
+    assert "layout_stats" in extra["task"]
+    assert extra["task"]["tuner"]["ladder"][saved_pos] == pytest.approx(
         task.tuner.ladder[saved_pos])
 
 
@@ -136,7 +142,7 @@ def test_relayout_rungs_compose_with_sharded_path():
     attention needs: constant whole-block S and a fixed mb capacity."""
     cfg, task = _mk_task()
     seqs = set()
-    for prep in task._preps.values():
+    for (prep,) in task._preps.values():
         lay = prep.layout
         seqs.add(lay.seq_len)
         assert lay.mb == task.mb_cap

@@ -3,9 +3,11 @@ determinism (same requests -> same generations)."""
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.launch.serve import DecodeEngine
+from repro.launch.serve import main as serve_main
 from repro.models import build
 
 
@@ -32,3 +34,11 @@ def test_engine_deterministic():
     e1, _ = _run(seed=1)
     e2, _ = _run(seed=1)
     assert e1.done == e2.done
+
+
+def test_serve_rejects_graph_archs(capsys):
+    """Graph archs have no decode path: the CLI must exit with a clear
+    message instead of crashing with a TypeError deep in the engine."""
+    with pytest.raises(SystemExit):
+        serve_main(["--arch", "graphormer_slim"])
+    assert "no autoregressive decode" in capsys.readouterr().err

@@ -1,0 +1,242 @@
+"""The Task layer (repro/tasks): one protocol for node-level, graph-level
+and link-prediction training.
+
+Covers: protocol conformance of every concrete task, GraphLevelTask and
+LinkTask end-to-end through the Trainer with the elastic ladder AND the
+dual-interleave schedule active at exactly two jitted traces (the same
+invariant tests/test_elastic.py holds for NodeTask), mini-batch cycling
+under a fixed shape budget, task state durability through the checkpoint
+manifest, and the BatchFnTask wrapping of plain LM streams."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.configs import get_smoke_config
+from repro.core.dual_attention import use_dense_step
+from repro.core.graph import sbm_graph
+from repro.data.lm_pipeline import LMDataConfig, lm_batch
+from repro.models import build
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.tasks import (BatchFnTask, GraphLevelTask, LinkTask, NodeTask,
+                         Task, synthetic_graph_level_dataset)
+
+
+def _trainer(cfg, task, ckpt_dir, steps=14, *, interleave=5,
+             elastic_every=2, ckpt_every=100, lr=2e-3):
+    tc = TrainerConfig(steps=steps, ckpt_every=ckpt_every,
+                       ckpt_dir=str(ckpt_dir), lr=lr, warmup=2,
+                       interleave_period=interleave,
+                       elastic_every=elastic_every)
+    return Trainer(build(cfg), tc, task=task)
+
+
+def _graph_level_task(cfg, n_graphs=8, batch_graphs=4, delta=2, seed=1):
+    graphs = synthetic_graph_level_dataset(n_graphs, cfg, seed=seed)
+    ev = synthetic_graph_level_dataset(4, cfg, seed=seed + 1)
+    return GraphLevelTask(graphs, cfg, eval_graphs=ev,
+                          batch_graphs=batch_graphs, delta=delta)
+
+
+def _link_task(cfg, n=128, delta=2, seed=0):
+    g = sbm_graph(n, 4, p_in=0.05, p_out=0.003, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=seed)
+    return LinkTask(g, cfg, bq=16, bk=16, d_b=8, delta=delta, n_pairs=64)
+
+
+# ------------------------------------------------------------- protocol
+
+def test_every_concrete_task_implements_the_protocol():
+    """Each task exposes the full protocol surface with the documented
+    types; LM streams train {"sparse"}, graph tasks {"sparse", "dense"}."""
+    cfg = get_smoke_config("graphormer_slim")
+    g = sbm_graph(96, 4, p_in=0.05, p_out=0.003, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    model = build(cfg)
+    tasks = [NodeTask(g, cfg, bq=16, bk=16, d_b=8, delta=2),
+             _graph_level_task(cfg, n_graphs=4, batch_graphs=2),
+             _link_task(cfg, n=96)]
+    for task in tasks:
+        assert isinstance(task, Task)
+        assert task.prepare(model) is task
+        assert set(task.loss_variants) == {"sparse", "dense"}
+        b = task.batches(0)
+        assert isinstance(b, dict) and b
+        assert isinstance(task.conditions_ok, bool)
+        assert task.variant(0, 0) == "sparse" or not task.conditions_ok
+        assert task.variant(5, 5) == "dense"  # schedule fires
+        sd = task.state_dict()
+        assert sd["task"] == task.name
+        task.load_state_dict(sd)  # self round-trip must be a no-op
+        assert "beta_thre" in task.log_extras()
+
+    lm_cfg = get_smoke_config("smollm_135m")
+    dc = LMDataConfig(vocab_size=lm_cfg.vocab_size, seq_len=32,
+                      global_batch=2)
+    stream = BatchFnTask(lambda s: lm_batch(dc, s))
+    stream.prepare(build(lm_cfg))
+    assert set(stream.loss_variants) == {"sparse"}
+    assert stream.variant(5, 5) == "sparse"  # no dense variant, ever
+    assert stream.state_dict() == {}
+
+
+def test_task_rejects_mismatched_model_config():
+    cfg = get_smoke_config("graphormer_slim")
+    task = _link_task(cfg, n=96)
+    other = build(get_smoke_config("gt"))
+    with pytest.raises(ValueError, match="built from"):
+        task.prepare(other)
+
+
+def test_model_has_no_loss_dense_field():
+    """The old graph-only special case must be gone: losses are a dict of
+    variants on every family."""
+    for arch in ("graphormer_slim", "gt", "smollm_135m"):
+        model = build(get_smoke_config(arch))
+        assert not hasattr(model, "loss_dense")
+        assert "sparse" in model.loss_variants
+        assert model.loss is model.loss_variants["sparse"]
+
+
+# ------------------------------------------- end-to-end through Trainer
+
+def test_graph_level_elastic_interleave_two_traces(tmp_path):
+    """GraphLevelTask end-to-end with elastic_every + interleave_period
+    active: ladder moves happen, the dense cadence is honored, mini-batches
+    cycle, and exactly two jitted traces exist for the whole run."""
+    cfg = get_smoke_config("graphormer_slim")
+    task = _graph_level_task(cfg)
+    tr = _trainer(cfg, task, tmp_path / "ck", lr=3e-3)
+    state, status = tr.run()
+    assert status == "done"
+    assert len(task.moves) >= 1
+    assert len({h["beta_thre"] for h in tr.history}) >= 2
+    for h in tr.history:
+        want = use_dense_step(h["step"] - 1, 5, task.conditions_ok)
+        assert h["dense"] == want, h
+    assert sum(1 for h in tr.history if h["dense"]) >= 1
+    # two mini-batches actually cycled, one trace per variant regardless
+    assert task.n_batches == 2
+    assert tr._step._cache_size() == 1
+    assert tr._step_dense._cache_size() == 1
+    ev = task.eval(state["params"])
+    assert set(ev) == {"acc", "xent"} and np.isfinite(ev["xent"])
+
+
+def test_link_task_elastic_interleave_two_traces(tmp_path):
+    """LinkTask end-to-end: fresh negative samples every step, elastic +
+    interleave active, two traces, loss goes down, eval is finite."""
+    cfg = get_smoke_config("graphormer_slim")
+    task = _link_task(cfg)
+    tr = _trainer(cfg, task, tmp_path / "ck", steps=16)
+    state, status = tr.run()
+    assert status == "done"
+    assert len(task.moves) >= 1
+    assert sum(1 for h in tr.history if h["dense"]) >= 1
+    assert tr._step._cache_size() == 1
+    assert tr._step_dense._cache_size() == 1
+    first = np.mean([h["loss"] for h in tr.history[:4]])
+    last = np.mean([h["loss"] for h in tr.history[-4:]])
+    assert last < first, (first, last)
+    ev = task.eval(state["params"])
+    assert 0.0 <= ev["acc"] <= 1.0 and np.isfinite(ev["xent"])
+
+
+def test_link_pair_stream_is_seekable():
+    """batches(step) must be pure in step (restart replays the stream)."""
+    cfg = get_smoke_config("graphormer_slim")
+    t1 = _link_task(cfg)
+    t2 = _link_task(cfg)
+    b1, b2 = t1.batches(7), t2.batches(7)
+    for k in ("pair_src", "pair_dst", "pair_y"):
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+    assert not np.array_equal(np.asarray(t1.batches(7)["pair_src"]),
+                              np.asarray(t1.batches(8)["pair_src"]))
+    # positives are real edges, negatives live in node space
+    y = np.asarray(b1["pair_y"]).astype(bool)
+    src = np.asarray(b1["pair_src"])
+    assert src.min() >= cfg.n_global
+    assert y.sum() == (~y).sum() == len(y) // 2
+
+
+def test_link_eval_split_has_no_reverse_edge_leak():
+    """The graphs are symmetrized and the score is symmetric, so the
+    train/eval split must hold out *undirected* pairs: no eval edge may
+    appear in the training positives in either direction."""
+    cfg = get_smoke_config("graphormer_slim")
+    task = _link_task(cfg)
+    ts, td = task._train_edges
+    es, ed = task._eval_edges
+    assert len(es) > 0 and len(ts) > 0
+    train_pairs = set(zip(np.minimum(ts, td).tolist(),
+                          np.maximum(ts, td).tolist()))
+    for a, b in zip(es.tolist(), ed.tolist()):
+        assert (min(a, b), max(a, b)) not in train_pairs, (a, b)
+
+
+def test_graph_level_rung_invariant_arrays_are_aliased():
+    """prepare_graph_task_ladder must alias the rung-invariant arrays
+    (feat/degrees/labels) across rungs — the elastic upload dedup keys on
+    host-array identity, so a copy per rung would multiply device memory
+    by the ladder length."""
+    cfg = get_smoke_config("graphormer_slim")
+    task = _graph_level_task(cfg, n_graphs=4, batch_graphs=2)
+    for i in range(task.n_batches):
+        rungs = [ps[i] for ps in task._preps.values()]
+        for key in ("feat", "in_deg", "out_deg", "labels"):
+            assert len({id(p.batch[key]) for p in rungs}) == 1, key
+        # while the pattern arrays really do differ per rung
+        assert len({id(p.batch["block_idx"]) for p in rungs}) == len(rungs)
+
+
+def test_graph_level_task_state_rides_checkpoint_manifest(tmp_path):
+    """Task state (tuner position, moves) restores through the Trainer's
+    manifest for graph-level tasks exactly as for node tasks."""
+    d = tmp_path / "ck"
+    cfg = get_smoke_config("graphormer_slim")
+    task = _graph_level_task(cfg)
+    tc = TrainerConfig(steps=10, ckpt_every=5, ckpt_dir=str(d), lr=3e-3,
+                       warmup=2, interleave_period=0, elastic_every=2,
+                       fail_at_step=9)
+    with pytest.raises(RuntimeError, match="injected"):
+        Trainer(build(cfg), tc, task=task).run()
+    assert len(task.moves) >= 1
+    ck = Checkpointer(str(d))
+    extra = ck.load_extra(ck.latest_step())
+    assert extra["task"]["task"] == "graph_level"
+
+    task2 = _graph_level_task(cfg)
+    tc2 = TrainerConfig(steps=10, ckpt_every=5, ckpt_dir=str(d), lr=3e-3,
+                        warmup=2, interleave_period=0, elastic_every=2)
+    state, status = Trainer(build(cfg), tc2, task=task2).run()
+    assert status == "done"
+    assert task2.moves[: len(task.moves)] == task.moves
+
+
+def test_task_type_mismatch_on_restart_is_loud(tmp_path):
+    """Restoring a node checkpoint into a link task must fail clearly,
+    not silently resume the wrong ladder."""
+    cfg = get_smoke_config("graphormer_slim")
+    task = _link_task(cfg)
+    sd = task.state_dict()
+    g = sbm_graph(128, 4, p_in=0.05, p_out=0.003, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    node = NodeTask(g, cfg, bq=16, bk=16, d_b=8, delta=2)
+    with pytest.raises(ValueError, match="task type"):
+        node.load_state_dict(sd)
+
+
+def test_batch_fn_stream_equals_old_trainer_behavior(tmp_path):
+    """Trainer(model, cfg, batch_fn) wraps into BatchFnTask: history gains
+    the variant fields, training stays bitwise-deterministic."""
+    cfg = get_smoke_config("smollm_135m")
+    dc = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=2)
+    tc = TrainerConfig(steps=4, ckpt_every=100, ckpt_dir=str(tmp_path),
+                       lr=1e-3, warmup=2)
+    tr = Trainer(build(cfg), tc, lambda s: lm_batch(dc, s))
+    assert isinstance(tr.task, BatchFnTask)
+    tr.run()
+    assert all(h["variant"] == "sparse" and not h["dense"]
+               for h in tr.history)
+    assert "beta_thre" not in tr.history[0]
