@@ -71,6 +71,27 @@ def main(full=False):
             f"dispatch=REPRO_FORCE_PALLAS_CLUSTER")
 
 
+def grad_mode(full=False):
+    """``--grad``: forward vs forward+backward through ops dispatch for
+    the ref and interpret kernel paths — the recompute-overhead ratio of
+    the FlashAttention-style backward (kernels/cluster_attention_bwd.py
+    rebuilds block scores from the logsumexp residual instead of storing
+    probabilities). Interpreter wall-clock is not TPU-representative; the
+    *ratio* within a mode is the signal. Same rig as benchmarks/run.py's
+    BENCH_attention.json records (common.cluster_grad_case)."""
+    from benchmarks.common import cluster_grad_case, timeit
+    from repro.kernels import ops as kops
+
+    case = cluster_grad_case(2048 if full else 500)
+    for mode in ("ref", "interpret"):
+        f, fb = case["fns"](mode)
+        t_f = timeit(f, case["q"], case["bt"])
+        t_fb = timeit(fb, case["q"], case["bt"])
+        row(f"grad_overhead_{mode}_S{case['seq_len']}", t_fb * 1e6,
+            f"fwd_us={t_f*1e6:.0f} recompute_overhead={t_fb/t_f:.2f}x")
+    kops.set_mode("auto", "cluster_attention")
+
+
 def sharded_kernel_compare(p: int = 4, *, seq: int = 512, heads: int = 8,
                            d_head: int = 16, bq: int = 64):
     """Time sharded_cluster_attention on p fake devices with attn_fn
@@ -124,4 +145,11 @@ def sharded_kernel_compare(p: int = 4, *, seq: int = 512, heads: int = 8,
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grad", action="store_true",
+                    help="time fwd vs fwd+bwd (recompute overhead ratio)")
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    grad_mode(full=a.full) if a.grad else main(full=a.full)

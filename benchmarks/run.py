@@ -2,15 +2,30 @@
 Prints ``name,us_per_call,derived`` CSV lines.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+  python benchmarks/run.py            # also works: paths bootstrapped
+
+Every FULL invocation (no ``--only``) first writes the machine-readable
+perf trajectory — ``BENCH_attention.json`` (micro: cluster/flash
+attention, ref vs interpret-kernel, forward and forward+backward) and
+``BENCH_e2e.json`` (one Graphormer-slim train step, loss-only vs
+value_and_grad) — then runs the suites; targeted ``--only NAME`` runs
+skip the JSON pass. ``--bench-json-only`` writes just the JSON (what CI
+uploads as an artifact). Schema (documented in docs/benchmarks.md): one
+record per measurement with the keys in ``BENCH_SCHEMA``.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SUITES = [
     ("fig1_seq_len_accuracy", "benchmarks.seq_len_accuracy"),
@@ -25,12 +40,145 @@ SUITES = [
     ("roofline_table", "benchmarks.roofline"),
 ]
 
+# one record per measurement; wall times are median microseconds on the
+# current backend (CPU in CI — the *trajectory* across commits is the
+# signal, not the absolute number); peak_bytes is XLA's temp-buffer
+# estimate from compiled.memory_analysis() (null where unavailable)
+BENCH_SCHEMA = ("op", "mode", "seq_len", "fwd_us", "bwd_us", "peak_bytes")
+
+
+def _compile(jitted, *args):
+    """AOT-compile once and read XLA's temp-buffer estimate from the SAME
+    executable the timing loop then calls — no double compile."""
+    try:
+        compiled = jitted.lower(*args).compile()
+    except Exception:  # noqa: BLE001 — backend without AOT lowering
+        return jitted, None
+    try:
+        peak = int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — backend without memory_analysis
+        peak = None
+    return compiled, peak
+
+
+def _record(op, mode, seq_len, fwd_us, bwd_us, peak_bytes):
+    rec = dict(zip(BENCH_SCHEMA, (op, mode, seq_len, fwd_us, bwd_us,
+                                  peak_bytes)))
+    print(f"bench_json,{op},{mode},S={seq_len},"
+          f"fwd_us={fwd_us},bwd_us={bwd_us}", flush=True)
+    return rec
+
+
+def _attention_records(seq_lens):
+    """Micro records: ops.cluster_attention (graph layout, bias; the
+    shared ``cluster_grad_case`` rig attention_breakdown --grad also
+    uses) and ops.flash_attention, ref vs interpret-kernel, fwd vs
+    fwd+bwd — dispatch mode is the only thing changing between modes,
+    and every mode gets a FRESH jit (dispatch resolves at trace time)."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import cluster_grad_case, timeit
+    from repro.kernels import ops as kops
+
+    records = []
+    key = jax.random.PRNGKey(0)
+    for S_target in seq_lens:
+        case = cluster_grad_case(S_target - 12, bq=32, heads=4, d_head=32)
+        for mode in ("ref", "interpret"):
+            f, fb = case["fns"](mode)
+            fbc, peak = _compile(fb, case["q"], case["bt"])
+            records.append(_record(
+                "cluster_attention", mode, case["seq_len"],
+                round(timeit(f, case["q"], case["bt"]) * 1e6, 1),
+                round(timeit(fbc, case["q"], case["bt"]) * 1e6, 1),
+                peak))
+        kops.set_mode("auto", "cluster_attention")
+
+        q = jax.random.normal(key, (1, case["seq_len"], 4, 32))
+        for mode in ("ref", "interpret"):
+            kops.set_mode(mode, "flash_attention")
+
+            def loss(q):
+                return kops.flash_attention(
+                    q, q, q, causal=True, block_q=64, block_k=64) \
+                    .astype(jnp.float32).sum()
+
+            f = jax.jit(loss)
+            fbc, peak = _compile(jax.jit(jax.value_and_grad(loss)), q)
+            records.append(_record(
+                "flash_attention", mode, case["seq_len"],
+                round(timeit(f, q) * 1e6, 1),
+                round(timeit(fbc, q) * 1e6, 1),
+                peak))
+        kops.set_mode("auto", "flash_attention")
+    return records
+
+
+def _e2e_records(n_nodes=192):
+    """End-to-end records: one Graphormer-slim sparse train step —
+    forward-only loss vs the full value_and_grad step — with the
+    attention dispatched to ref vs the interpret-mode kernel. The step
+    is re-jitted per mode: dispatch resolves at trace time, so reusing
+    one jitted step would silently measure the first mode twice."""
+    import jax
+
+    from benchmarks.common import GraphTrainBench, timeit
+    from repro.core.graph_model import graph_loss
+    from repro.kernels import ops as kops
+
+    bench = GraphTrainBench(arch="graphormer_slim", n=n_nodes)
+    params, ost = bench.init()
+    S = int(bench.batch["feat"].shape[1])
+    records = []
+    for mode in ("ref", "interpret"):
+        kops.set_mode(mode, "cluster_attention")
+        loss_only = jax.jit(
+            lambda p, b: graph_loss(p, bench.cfg, b, dense=False)[0])
+        step = jax.jit(lambda p, o, b: bench._step(p, o, b, dense=False,
+                                                   bias=False))
+        stepc, peak = _compile(step, params, ost, bench.batch)
+        records.append(_record(
+            "train_step", mode, S,
+            round(timeit(loss_only, params, bench.batch) * 1e6, 1),
+            round(timeit(stepc, params, ost, bench.batch) * 1e6, 1),
+            peak))
+    kops.set_mode("auto", "cluster_attention")
+    return records
+
+
+def write_bench_json(out_dir: str = ".", *, full: bool = False) -> None:
+    """Write BENCH_attention.json / BENCH_e2e.json into ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    seq_lens = (256, 512) if full else (256,)
+    for fname, records in (
+            ("BENCH_attention.json", _attention_records(seq_lens)),
+            ("BENCH_e2e.json", _e2e_records())):
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as fh:
+            json.dump({"schema": list(BENCH_SCHEMA), "records": records},
+                      fh, indent=2)
+        print(f"# wrote {path} ({len(records)} records)", flush=True)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--bench-json-only", action="store_true",
+                    help="write BENCH_*.json and exit (CI artifact mode)")
+    ap.add_argument("--bench-json-dir", default=".")
     args = ap.parse_args()
+
+    # targeted --only runs skip the bench-JSON pass (it costs ~30s of
+    # interpret-mode benching); full runs and CI's --bench-json-only
+    # always produce the trajectory
+    if args.only is None or args.bench_json_only:
+        t0 = time.time()
+        write_bench_json(args.bench_json_dir, full=args.full)
+        print(f"# --- bench json done in {time.time()-t0:.1f}s", flush=True)
+        if args.bench_json_only:
+            return
 
     failures = []
     for name, mod_name in SUITES:

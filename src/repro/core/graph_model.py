@@ -77,10 +77,11 @@ def _graph_attn(p, cfg, h, batch, dense: bool, bias_table):
     else:
         bi = batch["block_idx"]
         bu = batch.get("buckets")
+        bit = batch.get("block_idx_t")  # transposed layout (dK/dV bwd)
         bq_ = h.shape[1] // bi.shape[1]
         bk_ = bu.shape[-1] if bu is not None else bq_
         attn_fn = lambda a, b, c: kops.cluster_attention(
-            a, b, c, bi, bu, bias_table, causal=False)
+            a, b, c, bi, bu, bias_table, bit, causal=False)
 
     ctx = pax.current()
     if ctx is not None:
@@ -89,8 +90,8 @@ def _graph_attn(p, cfg, h, batch, dense: bool, bias_table):
         if recipe.ulysses and not dense and pm > 1 and can_shard_cluster(
                 cfg.n_heads, cfg.kv_heads, h.shape[1], pm, bq_, bk_):
             o = sharded_cluster_attention(
-                q, k, v, bi, bu, bias_table, mesh=mesh, bq=bq_, bk=bk_,
-                dp_axes=("data", "pod"))
+                q, k, v, bi, bu, bias_table, bit, mesh=mesh, bq=bq_,
+                bk=bk_, dp_axes=("data", "pod"))
             return L.out_proj(p, o)
         # non-shardable sparse shapes fall through to the plain dispatch
         # call below (GSPMD decides the layout). Deliberately NOT a

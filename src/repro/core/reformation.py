@@ -48,6 +48,10 @@ class ClusterLayout:
     buckets: np.ndarray | None  # (nq, mb, bq, bk) int8
     n_buckets: int
     stats: dict
+    # transposed pattern for the dK/dV backward kernel: per k-block row,
+    # the (q-block row, forward slot) pairs that visit it — (nk, mt, 2)
+    # int32, -1 padded (see kernels/cluster_attention_bwd.py)
+    block_idx_t: np.ndarray | None = None
 
     @property
     def nq(self) -> int:
@@ -57,6 +61,11 @@ class ClusterLayout:
     def mb(self) -> int:
         return self.block_idx.shape[1]
 
+    @property
+    def mt(self) -> int:
+        """Capacity of the transposed pattern's visiting-q-block axis."""
+        return 0 if self.block_idx_t is None else self.block_idx_t.shape[1]
+
     def density(self) -> float:
         """Fraction of the full S^2 score matrix actually computed."""
         active = int((self.block_idx >= 0).sum())
@@ -65,6 +74,28 @@ class ClusterLayout:
 
 def _pad_to(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def transpose_block_idx(block_idx: np.ndarray, nk: int) -> np.ndarray:
+    """Transposed block pattern for the dK/dV backward kernel: for each
+    k-block ``j``, the list of ``(q-block row i, forward slot m)`` pairs
+    with ``block_idx[i, m] == j``. Returns ``(nk, mt, 2)`` int32, -1
+    padded, ``mt`` padded to a multiple of 4 (same convention as the
+    forward ``mb`` axis) so elastic re-reformation pads both layouts the
+    same way."""
+    nq, mb = block_idx.shape
+    ii, mm = np.nonzero(block_idx >= 0)
+    jj = block_idx[ii, mm]
+    order = np.lexsort((ii, jj))       # group by k-block, q-rows ascending
+    ii, mm, jj = ii[order], mm[order], jj[order]
+    counts = np.bincount(jj, minlength=nk)
+    mt = max(4, _pad_to(int(counts.max()) if counts.size else 1, 4))
+    out = np.full((nk, mt, 2), -1, np.int32)
+    slot = np.arange(jj.size) - np.concatenate(
+        [[0], np.cumsum(counts)[:-1]])[jj]
+    out[jj, slot, 0] = ii
+    out[jj, slot, 1] = mm
+    return out
 
 
 def augment_edges(g: Graph, n_global: int, chain: bool):
@@ -246,7 +277,8 @@ def build_layout(g: Graph, *, bq: int = 128, bk: int = 128,
         "edges_kept": int(kept_r.size),
         "edges_dropped": edges_dropped,
     }
-    return ClusterLayout(S, bq, bk, block_idx, bucket_arr, n_buckets, stats)
+    return ClusterLayout(S, bq, bk, block_idx, bucket_arr, n_buckets, stats,
+                         block_idx_t=transpose_block_idx(block_idx, nk))
 
 
 def lm_local_global_layout(seq_len: int, *, bq: int = 128, bk: int = 128,
@@ -272,4 +304,5 @@ def lm_local_global_layout(seq_len: int, *, bq: int = 128, bk: int = 128,
     return ClusterLayout(S, bq, bk, block_idx, None, 0,
                          {"window": window, "n_global": n_global,
                           "density": (block_idx >= 0).sum() * bq * bk
-                          / float(S) ** 2})
+                          / float(S) ** 2},
+                         block_idx_t=transpose_block_idx(block_idx, nk))

@@ -43,11 +43,13 @@ def prepare_node_task(g: Graph, cfg, *, beta_thre: float | None = None,
                       with_buckets: bool = True,
                       with_dense_buckets: bool = False,
                       mb_pad: int | None = None,
+                      mt_pad: int | None = None,
                       seed: int = 0) -> PreparedGraph:
     """Single-graph node classification: one sequence of all nodes
     (B=1), global tokens prepended.
 
-    ``mb_pad`` pads the layout's selected-k-block axis to a fixed capacity
+    ``mb_pad`` / ``mt_pad`` pad the layout's selected-k-block axis and
+    the transposed pattern's visiting-q-block axis to fixed capacities
     (see :func:`pad_layout_mb`) so elastic re-layout at a different
     ``beta_thre`` keeps every batch array shape-identical.
     ``with_dense_buckets`` adds the scattered (1, S, S) int8 bucket matrix
@@ -56,8 +58,8 @@ def prepare_node_task(g: Graph, cfg, *, beta_thre: float | None = None,
         g, cfg, [beta_thre], bq=bq, bk=bk, d_b=d_b, k_clusters=k_clusters,
         train_mask=train_mask, with_buckets=with_buckets,
         with_dense_buckets=with_dense_buckets, seed=seed)[0]
-    if mb_pad is not None:
-        prep = pad_layout_mb(prep, mb_pad)
+    if mb_pad is not None or mt_pad is not None:
+        prep = pad_layout_mb(prep, mb_pad or prep.layout.mb, mt_pad)
     return prep
 
 
@@ -129,6 +131,9 @@ def prepare_node_task_ladder(g: Graph, cfg, beta_thres,
             "labels": labels,
             "block_idx": layout.block_idx[None],
         }
+        if layout.block_idx_t is not None:
+            # transposed pattern for the dK/dV backward kernel
+            batch["block_idx_t"] = layout.block_idx_t[None]
         if layout.buckets is not None:
             batch["buckets"] = layout.buckets[None]
         if pe is not None:
@@ -143,16 +148,21 @@ def prepare_node_task_ladder(g: Graph, cfg, beta_thres,
     return out
 
 
-def pad_layout_mb(prep: PreparedGraph, mb: int) -> PreparedGraph:
-    """Pad the mb (selected-k-block) axis of ``block_idx``/``buckets`` to a
-    fixed per-run capacity. Padding slots are -1 / BUCKET_MASKED, i.e.
-    fully masked — numerically a no-op. The elastic trainer pads every
-    ladder rung's layout to the max mb across the ladder so re-layout
-    changes array *contents*, never shapes (zero retraces)."""
+def pad_layout_mb(prep: PreparedGraph, mb: int,
+                  mt: int | None = None) -> PreparedGraph:
+    """Pad the mb (selected-k-block) axis of ``block_idx``/``buckets`` —
+    and the mt (visiting-q-block) axis of the transposed ``block_idx_t``
+    — to fixed per-run capacities. Padding slots are -1 / BUCKET_MASKED,
+    i.e. fully masked — numerically a no-op. The elastic trainer pads
+    every ladder rung's layout to the max (mb, mt) across the ladder so
+    re-layout changes array *contents*, never shapes (zero retraces)."""
     lay = prep.layout
     if mb < lay.mb:
         raise ValueError(f"mb_pad {mb} < layout mb {lay.mb}")
-    if mb == lay.mb:
+    if mt is not None and lay.block_idx_t is not None and mt < lay.mt:
+        raise ValueError(f"mt_pad {mt} < layout mt {lay.mt}")
+    if mb == lay.mb and (mt is None or lay.block_idx_t is None
+                         or mt == lay.mt):
         return prep
     extra = mb - lay.mb
     block_idx = np.pad(lay.block_idx, ((0, 0), (0, extra)),
@@ -162,12 +172,20 @@ def pad_layout_mb(prep: PreparedGraph, mb: int) -> PreparedGraph:
         buckets = np.pad(lay.buckets,
                          ((0, 0), (0, extra), (0, 0), (0, 0)),
                          constant_values=BUCKET_MASKED)
+    block_idx_t = lay.block_idx_t
+    if block_idx_t is not None and mt is not None and mt > lay.mt:
+        block_idx_t = np.pad(block_idx_t,
+                             ((0, 0), (0, mt - lay.mt), (0, 0)),
+                             constant_values=-1)
     batch = dict(prep.batch)
     batch["block_idx"] = block_idx[None]
     if buckets is not None and "buckets" in batch:
         batch["buckets"] = buckets[None]
+    if block_idx_t is not None and "block_idx_t" in batch:
+        batch["block_idx_t"] = block_idx_t[None]
     layout = ClusterLayout(lay.seq_len, lay.bq, lay.bk, block_idx, buckets,
-                           lay.n_buckets, lay.stats)
+                           lay.n_buckets, lay.stats,
+                           block_idx_t=block_idx_t)
     return PreparedGraph(batch, layout, prep.report, prep.cut,
                          prep.prep_seconds, perm=prep.perm)
 
@@ -252,8 +270,9 @@ def prepare_graph_task_ladder(graphs: list[Graph], cfg, beta_thres,
         seq_pad = max(p.layout.seq_len for p in out)
     if mb_pad is None:
         mb_pad = max(p.layout.mb for p in out)
+    mt_pad = max(p.layout.mt for p in out)
     shared: dict = {}  # keep invariant arrays aliased through the pad
-    out = [pad_graph_batch(p, seq_pad, mb_pad, _shared=shared)
+    out = [pad_graph_batch(p, seq_pad, mb_pad, mt_pad, _shared=shared)
            for p in out]
     out[-1].prep_seconds += time.perf_counter() - t_prev  # the pad pass
     return out
@@ -291,13 +310,18 @@ def _pack_graph_rung(gps, layouts, inv_batch, cfg, bq, bk, S, report, cut,
     around the shared (aliased, treat as read-only) invariant batch."""
     B = len(gps)
     mb = max(lay.mb for lay in layouts)
+    mt = max((lay.mt for lay in layouts), default=4)
     block_idx = np.full((B, S // bq, mb), -1, np.int32)
+    block_idx_t = np.full((B, S // bk, mt, 2), -1, np.int32)
     buckets = np.full((B, S // bq, mb, bq, bk), BUCKET_MASKED, np.int8)
     dense_buckets = np.full((B, S, S), -1, np.int8) \
         if with_dense_buckets else None
     for i, lay in enumerate(layouts):
         nq_i = lay.block_idx.shape[0]
         block_idx[i, :nq_i, :lay.mb] = lay.block_idx
+        if lay.block_idx_t is not None:
+            block_idx_t[i, :lay.block_idx_t.shape[0], :lay.mt] = \
+                lay.block_idx_t
         if lay.buckets is not None:
             buckets[i, :nq_i, :lay.mb] = lay.buckets
         if dense_buckets is not None:
@@ -306,6 +330,7 @@ def _pack_graph_rung(gps, layouts, inv_batch, cfg, bq, bk, S, report, cut,
             dense_buckets[i, :si, :si] = dense_buckets_from_layout(lay)
     batch = dict(inv_batch)
     batch["block_idx"] = block_idx
+    batch["block_idx_t"] = block_idx_t
     batch["buckets"] = buckets
     if dense_buckets is not None:
         batch["dense_buckets"] = dense_buckets
@@ -319,35 +344,42 @@ def _pack_graph_rung(gps, layouts, inv_batch, cfg, bq, bk, S, report, cut,
                 "edges_kept", "edges_dropped"):
         stats[key] = int(sum(s[key] for s in per))
     layout = ClusterLayout(S, bq, bk, block_idx[0], buckets[0],
-                           layouts[0].n_buckets, stats)
+                           layouts[0].n_buckets, stats,
+                           block_idx_t=block_idx_t[0])
     return PreparedGraph(batch, layout, report, cut, prep_seconds)
 
 
 def pad_graph_batch(prep: PreparedGraph, seq: int, mb: int,
+                    mt: int | None = None,
                     *, _shared: dict | None = None) -> PreparedGraph:
-    """Pad a multi-graph batch to a fixed (seq, mb) shape budget. Padding
-    is fully masked (feat 0, labels -1, block_idx -1, buckets
-    BUCKET_MASKED, dense_buckets -1) — numerically a no-op for the sparse
-    step and label-masked for the dense one — so every mini-batch and
-    every ladder rung of a graph-level task is shape-identical: the
-    Trainer's jitted steps trace once, re-layouts and ragged batches
-    included.
+    """Pad a multi-graph batch to a fixed (seq, mb[, mt]) shape budget.
+    Padding is fully masked (feat 0, labels -1, block_idx/block_idx_t -1,
+    buckets BUCKET_MASKED, dense_buckets -1) — numerically a no-op for
+    the sparse step and label-masked for the dense one — so every
+    mini-batch and every ladder rung of a graph-level task is
+    shape-identical: the Trainer's jitted steps trace once, re-layouts
+    and ragged batches included.
 
     Arrays that need no padding keep their identity, and ``_shared``
     (an id(original) -> padded cache, one dict per ladder) lets arrays
     aliased across rungs stay aliased after padding — the elastic upload
     dedup depends on it."""
     lay = prep.layout
-    if seq < lay.seq_len or mb < lay.mb:
-        raise ValueError(f"pad budget ({seq}, {mb}) < layout "
-                         f"({lay.seq_len}, {lay.mb})")
+    if mt is None:
+        mt = lay.mt
+    if seq < lay.seq_len or mb < lay.mb or \
+            (lay.block_idx_t is not None and mt < lay.mt):
+        raise ValueError(f"pad budget ({seq}, {mb}, {mt}) < layout "
+                         f"({lay.seq_len}, {lay.mb}, {lay.mt})")
     if seq % lay.bq or seq % lay.bk:
         raise ValueError(f"seq_pad {seq} not divisible by blocks "
                          f"({lay.bq}, {lay.bk})")
-    if seq == lay.seq_len and mb == lay.mb:
+    if seq == lay.seq_len and mb == lay.mb and mt == lay.mt:
         return prep
     ds, dq = seq - lay.seq_len, seq // lay.bq - lay.nq
     dm = mb - lay.mb
+    dkb = seq // lay.bk - (lay.seq_len // lay.bk)
+    dmt = mt - lay.mt
 
     def pad(arr, widths, cv=0):
         if not any(w for _, w in widths):
@@ -367,6 +399,9 @@ def pad_graph_batch(prep: PreparedGraph, seq: int, mb: int,
     batch["labels"] = pad(b["labels"], ((0, 0), (0, ds)), cv=-1)
     batch["block_idx"] = pad(b["block_idx"],
                              ((0, 0), (0, dq), (0, dm)), cv=-1)
+    if "block_idx_t" in b:
+        batch["block_idx_t"] = pad(
+            b["block_idx_t"], ((0, 0), (0, dkb), (0, dmt), (0, 0)), cv=-1)
     if "buckets" in b:
         batch["buckets"] = pad(
             b["buckets"], ((0, 0), (0, dq), (0, dm), (0, 0), (0, 0)),
@@ -378,6 +413,8 @@ def pad_graph_batch(prep: PreparedGraph, seq: int, mb: int,
             b["dense_buckets"], ((0, 0), (0, ds), (0, ds)), cv=-1)
     layout = ClusterLayout(seq, lay.bq, lay.bk, batch["block_idx"][0],
                            batch.get("buckets", [None])[0], lay.n_buckets,
-                           lay.stats)
+                           lay.stats,
+                           block_idx_t=batch.get("block_idx_t",
+                                                 [None])[0])
     return PreparedGraph(batch, layout, prep.report, prep.cut,
                          prep.prep_seconds)

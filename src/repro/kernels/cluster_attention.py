@@ -17,7 +17,16 @@ gathers; on TPU we eliminate the irregularity structurally:
   position (graph mode); bias_table is a small (H, n_buckets) VMEM-resident
   lookup.
 
-Grid (BH, nq, mb); online-softmax scratch carried over mb.
+Grid (B, H, nq, mb) — per-graph layouts (``block_idx`` of shape
+``(B, nq, mb)``) batch the scalar-prefetch stream into the SAME single
+``pallas_call`` (the index maps select graph ``b``'s rows), so a batch of
+graphs costs one launch, not a Python loop. Online-softmax scratch is
+carried over mb.
+
+The forward can additionally emit per-row ``logsumexp`` residuals
+(``return_residuals=True``) — the recomputation backward
+(kernels/cluster_attention_bwd.py) rebuilds block scores from q/k and the
+residual instead of materializing the (S, S) probability matrix.
 """
 
 from __future__ import annotations
@@ -32,13 +41,37 @@ from jax.experimental.pallas import tpu as pltpu
 F32 = jnp.float32
 NEG_INF = -1e30
 
+# trace-time launch counter (tests assert the batched per-graph path
+# issues exactly ONE pallas_call per traced forward)
+_PALLAS_CALLS = [0]
 
-def _cluster_kernel(idx_ref,                 # scalar-prefetch (nq, mb)
-                    q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
-                    sm_scale, causal, block_q, block_k, n_heads):
-    qi = pl.program_id(1)
-    mi = pl.program_id(2)
-    mb = pl.num_programs(2)
+
+def pallas_call_count() -> int:
+    """Number of ``pl.pallas_call`` launches built by this module so far
+    (increments at trace time; cached jit re-executions don't count)."""
+    return _PALLAS_CALLS[0]
+
+
+def _finalize_row(o_ref, lse_ref, m_s, l_s, acc_s):
+    """Write the output block and (training path: ``lse_ref`` is None on
+    forward-only calls) its logsumexp residual from the online-softmax
+    state. Dead rows (no unmasked entry anywhere: l == 0) get lse = 0, so
+    the backward's ``exp(s - lse)`` underflows to exactly 0 for their
+    NEG_INF scores instead of producing exp(0) = 1."""
+    l = l_s[...]
+    o_ref[0] = (acc_s[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    if lse_ref is not None:
+        lse = m_s[..., 0] + jnp.log(jnp.maximum(l[..., 0], 1e-30))
+        lse_ref[0] = jnp.where(l[..., 0] > 0, lse, 0.0)
+
+
+def _cluster_kernel(idx_ref,                 # scalar-prefetch (B, nq, mb)
+                    q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
+                    sm_scale, causal, block_q, block_k):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    mi = pl.program_id(3)
+    mb = pl.num_programs(3)
 
     @pl.when(mi == 0)
     def _init():
@@ -46,7 +79,7 @@ def _cluster_kernel(idx_ref,                 # scalar-prefetch (nq, mb)
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
 
-    blk = idx_ref[qi, mi]
+    blk = idx_ref[b, qi, mi]
 
     @pl.when(blk >= 0)
     def _compute():
@@ -72,19 +105,18 @@ def _cluster_kernel(idx_ref,                 # scalar-prefetch (nq, mb)
 
     @pl.when(mi == mb - 1)
     def _finalize():
-        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
-                    ).astype(o_ref.dtype)
+        _finalize_row(o_ref, lse_ref, m_s, l_s, acc_s)
 
 
 def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
-                           o_ref, m_s, l_s, acc_s, *,
-                           sm_scale, causal, block_q, block_k, n_heads):
+                           o_ref, lse_ref, m_s, l_s, acc_s, *,
+                           sm_scale, causal, block_q, block_k):
     """Variant with int8 bucket masks + per-head bias table (graph mode)."""
-    bh = pl.program_id(0)
-    qi = pl.program_id(1)
-    mi = pl.program_id(2)
-    mb = pl.num_programs(2)
-    h = bh % n_heads
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    qi = pl.program_id(2)
+    mi = pl.program_id(3)
+    mb = pl.num_programs(3)
 
     @pl.when(mi == 0)
     def _init():
@@ -92,7 +124,7 @@ def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
 
-    blk = idx_ref[qi, mi]
+    blk = idx_ref[b, qi, mi]
 
     @pl.when(blk >= 0)
     def _compute():
@@ -100,7 +132,7 @@ def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
         k = k_ref[0].astype(F32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=F32) * sm_scale
-        bkt = bkt_ref[0, 0].astype(jnp.int32)          # (bq, bk)
+        bkt = bkt_ref[...].reshape(block_q, block_k).astype(jnp.int32)
         table = bias_ref[h]                            # (n_buckets,)
         bias = jnp.take(table, jnp.maximum(bkt, 0), axis=0, mode="clip")
         s = jnp.where(bkt >= 0, s + bias, NEG_INF)
@@ -117,21 +149,27 @@ def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
 
     @pl.when(mi == mb - 1)
     def _finalize():
-        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
-                    ).astype(o_ref.dtype)
+        _finalize_row(o_ref, lse_ref, m_s, l_s, acc_s)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+@functools.partial(jax.jit, static_argnames=("causal", "interpret",
+                                             "return_residuals"))
 def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
-                      causal: bool = False, interpret: bool = False):
-    """q (B,S,H,Dh); k/v (B,S,KV,Dh); block_idx (nq, mb) int32 shared across
-    the batch (per-graph layouts: vmap/loop at the caller);
-    buckets (nq, mb, bq, bk) int8 optional; bias_table (H, n_buckets).
-    Block sizes are implied: bq = S // nq, bk from buckets or = bq."""
+                      causal: bool = False, interpret: bool = False,
+                      return_residuals: bool = False):
+    """q (B,S,H,Dh); k/v (B,S,KV,Dh); block_idx (nq, mb) int32 shared
+    across the batch OR (B, nq, mb) per-graph layouts — both run as ONE
+    pallas_call (the grid carries the batch dim and the scalar-prefetch
+    index maps select per-graph rows); buckets (nq, mb, bq, bk) /
+    (B, nq, mb, bq, bk) int8 optional; bias_table (H, n_buckets).
+    Block sizes are implied: bq = S // nq, bk from buckets or = bq.
+    ``return_residuals=True`` also returns the per-row logsumexp
+    ``(B*H, S)`` f32 for the recomputation backward."""
     B, S, H, Dh = q.shape
     KV = k.shape[2]
     G = H // KV
-    nq, mb = block_idx.shape
+    per_graph = block_idx.ndim == 3
+    nq, mb = block_idx.shape[-2:]
     bq = S // nq
     bk = buckets.shape[-1] if buckets is not None else bq
     sm_scale = Dh ** -0.5
@@ -139,81 +177,80 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
     qt = jnp.moveaxis(q, 2, 1).reshape(B * H, S, Dh)
     kt = jnp.moveaxis(k, 2, 1).reshape(B * KV, S, Dh)
     vt = jnp.moveaxis(v, 2, 1).reshape(B * KV, S, Dh)
-    safe_idx = block_idx  # kernel skips <0; DMA clamps via index_map max(0)
+    # one (B, nq, mb) prefetch stream either way: a batch-shared layout is
+    # broadcast (nq*mb int32 per graph — noise next to q/k/v)
+    idx = jnp.broadcast_to(block_idx.astype(jnp.int32)[None] if not per_graph
+                           else block_idx.astype(jnp.int32), (B, nq, mb))
 
-    def q_map(bh, qi, mi, idx_ref=None):
-        return (bh, qi, 0)
-
-    def kv_map(bh, qi, mi, idx_ref=None):
-        row = jnp.maximum(idx_ref[qi, mi], 0)
-        return ((bh // H) * KV + (bh % H) // G, row, 0)
-
-    grid = (B * H, nq, mb)
+    grid = (B, H, nq, mb)
     scratch = [pltpu.VMEM((bq, 1), F32), pltpu.VMEM((bq, 1), F32),
                pltpu.VMEM((bq, Dh), F32)]
+    # the residual output only exists on the training path — forward-only
+    # calls (inference, serve) don't pay the (B*H, S) f32 write
+    out_shape = [jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype)]
+    out_specs = [pl.BlockSpec((1, bq, Dh),
+                              lambda b, h, qi, mi, idx: (b * H + h, qi, 0))]
+    if return_residuals:
+        out_shape.append(jax.ShapeDtypeStruct((B * H, S), F32))
+        out_specs.append(pl.BlockSpec(
+            (1, bq), lambda b, h, qi, mi, idx: (b * H + h, qi)))
+    qkv_specs = [
+        pl.BlockSpec((1, bq, Dh),
+                     lambda b, h, qi, mi, idx: (b * H + h, qi, 0)),
+        pl.BlockSpec((1, bk, Dh),
+                     lambda b, h, qi, mi, idx: (
+                         b * KV + h // G,
+                         jnp.maximum(idx[b, qi, mi], 0), 0)),
+        pl.BlockSpec((1, bk, Dh),
+                     lambda b, h, qi, mi, idx: (
+                         b * KV + h // G,
+                         jnp.maximum(idx[b, qi, mi], 0), 0)),
+    ]
 
     if buckets is None:
         kernel = functools.partial(
             _cluster_kernel, sm_scale=sm_scale, causal=causal, block_q=bq,
-            block_k=bk, n_heads=H)
+            block_k=bk)
+        if not return_residuals:
+            body = kernel
+            kernel = lambda i, q_, k_, v_, o, m, l, a: \
+                body(i, q_, k_, v_, o, None, m, l, a)
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, bq, Dh),
-                             lambda bh, qi, mi, idx: (bh, qi, 0)),
-                pl.BlockSpec((1, bk, Dh),
-                             lambda bh, qi, mi, idx: (
-                                 (bh // H) * KV + (bh % H) // G,
-                                 jnp.maximum(idx[qi, mi], 0), 0)),
-                pl.BlockSpec((1, bk, Dh),
-                             lambda bh, qi, mi, idx: (
-                                 (bh // H) * KV + (bh % H) // G,
-                                 jnp.maximum(idx[qi, mi], 0), 0)),
-            ],
-            out_specs=pl.BlockSpec((1, bq, Dh),
-                                   lambda bh, qi, mi, idx: (bh, qi, 0)),
-            scratch_shapes=scratch,
-        )
-        out = pl.pallas_call(
-            kernel, grid_spec=grid_spec,
-            out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
-            interpret=interpret,
-        )(safe_idx, qt, kt, vt)
+            num_scalar_prefetch=1, grid=grid, in_specs=qkv_specs,
+            out_specs=out_specs, scratch_shapes=scratch)
+        args = (idx, qt, kt, vt)
     else:
         if bias_table is None:
-            bias_table = jnp.zeros((H, int(buckets.max()) + 1
-                                    if buckets.size else 1), F32)
+            # zero bias: a 1-wide table is jit-safe (no data-dependent
+            # width) and numerically exact — bucket lookups clamp to row 0
+            bias_table = jnp.zeros((H, 1), F32)
+        if per_graph:
+            bkt_spec = pl.BlockSpec(
+                (1, 1, 1, bq, bk),
+                lambda b, h, qi, mi, idx: (b, qi, mi, 0, 0))
+        else:
+            bkt_spec = pl.BlockSpec(
+                (1, 1, bq, bk), lambda b, h, qi, mi, idx: (qi, mi, 0, 0))
         kernel = functools.partial(
             _cluster_kernel_biased, sm_scale=sm_scale, causal=causal,
-            block_q=bq, block_k=bk, n_heads=H)
+            block_q=bq, block_k=bk)
+        if not return_residuals:
+            body = kernel
+            kernel = lambda i, q_, k_, v_, bk_, bi_, o, m, l, a: \
+                body(i, q_, k_, v_, bk_, bi_, o, None, m, l, a)
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, bq, Dh),
-                             lambda bh, qi, mi, idx: (bh, qi, 0)),
-                pl.BlockSpec((1, bk, Dh),
-                             lambda bh, qi, mi, idx: (
-                                 (bh // H) * KV + (bh % H) // G,
-                                 jnp.maximum(idx[qi, mi], 0), 0)),
-                pl.BlockSpec((1, bk, Dh),
-                             lambda bh, qi, mi, idx: (
-                                 (bh // H) * KV + (bh % H) // G,
-                                 jnp.maximum(idx[qi, mi], 0), 0)),
-                pl.BlockSpec((1, 1, bq, bk),
-                             lambda bh, qi, mi, idx: (qi, mi, 0, 0)),
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=qkv_specs + [
+                bkt_spec,
                 pl.BlockSpec((H, bias_table.shape[1]),
-                             lambda bh, qi, mi, idx: (0, 0)),
+                             lambda b, h, qi, mi, idx: (0, 0)),
             ],
-            out_specs=pl.BlockSpec((1, bq, Dh),
-                                   lambda bh, qi, mi, idx: (bh, qi, 0)),
-            scratch_shapes=scratch,
-        )
-        out = pl.pallas_call(
-            kernel, grid_spec=grid_spec,
-            out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
-            interpret=interpret,
-        )(safe_idx, qt, kt, vt, buckets, bias_table.astype(F32))
-    out = out.reshape(B, H, S, Dh)
-    return jnp.moveaxis(out, 1, 2)
+            out_specs=out_specs, scratch_shapes=scratch)
+        args = (idx, qt, kt, vt, buckets, bias_table.astype(F32))
+
+    _PALLAS_CALLS[0] += 1
+    res = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret)(*args)
+    out = jnp.moveaxis(res[0].reshape(B, H, S, Dh), 1, 2)
+    return (out, res[1]) if return_residuals else out

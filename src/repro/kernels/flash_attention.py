@@ -8,8 +8,15 @@ online-softmax state (m, l, acc) in VMEM scratch carried across k blocks.
 Causal fully-masked blocks are skipped with pl.when (no wasted MXU work —
 unlike the jnp oracle, which computes-then-masks).
 
+``flash_attention_vjp`` is the differentiable spelling: the forward also
+emits per-row logsumexp residuals, and a recomputation backward (dQ over
+grid (BH, nq, nk); dK/dV over the transposed grid (BH, nk, nq), GQA
+groups reduced in the epilogue) rebuilds block scores instead of storing
+probabilities — this is what the dispatch layer routes kernel-mode calls
+through, so ``jax.value_and_grad`` stays on the kernel path.
+
 Validated in interpret mode against ref.py (pure jnp) over shape/dtype
-sweeps in tests/test_kernels.py.
+sweeps in tests/test_kernels.py; gradients in tests/test_dispatch.py.
 """
 
 from __future__ import annotations
@@ -25,7 +32,7 @@ F32 = jnp.float32
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
                   sm_scale: float, causal: bool, block_q: int, block_k: int,
                   seq_k: int):
     qi = pl.program_id(1)
@@ -69,26 +76,25 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
 
     @pl.when(ki == nk - 1)
     def _finalize():
-        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
-                    ).astype(o_ref.dtype)
+        l = l_s[...]
+        o_ref[0] = (acc_s[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        if lse_ref is not None:  # residuals only on the training path
+            lse = m_s[..., 0] + jnp.log(jnp.maximum(l[..., 0], 1e-30))
+            lse_ref[0] = jnp.where(l[..., 0] > 0, lse, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "block_q", "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False):
-    """q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh). Returns (B, Sq, H, Dh)."""
+def _shapes(q, k, block_q, block_k):
     B, Sq, H, Dh = q.shape
     Sk, KV = k.shape[1], k.shape[2]
-    G = H // KV
-    sm_scale = Dh ** -0.5
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+    return B, Sq, H, Dh, Sk, KV, H // KV, bq, bk, nq, nk
 
-    bq = min(block_q, Sq)
-    bk = min(block_k, Sk)
-    nq = -(-Sq // bq)
-    nk = -(-Sk // bk)
-    sq_p, sk_p = nq * bq, nk * bk
 
+def _collapse(q, k, v, sq_p, sk_p):
+    """(B, S, H, Dh) -> (B*H, S_pad, Dh) with ragged tails zero-padded."""
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
     qt = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, Dh)
     kt = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, Dh)
     vt = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, Dh)
@@ -97,21 +103,51 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     if sk_p != Sk:
         kt = jnp.pad(kt, ((0, 0), (0, sk_p - Sk), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, sk_p - Sk), (0, 0)))
+    return qt, kt, vt
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret", "return_residuals"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False,
+                    return_residuals: bool = False):
+    """q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh). Returns (B, Sq, H, Dh);
+    with ``return_residuals=True`` also the per-row logsumexp
+    ``(B*H, Sq_padded)`` f32 for the recomputation backward."""
+    B, Sq, H, Dh, Sk, KV, G, bq, bk, nq, nk = _shapes(q, k, block_q,
+                                                      block_k)
+    sm_scale = Dh ** -0.5
+    sq_p, sk_p = nq * bq, nk * bk
+    qt, kt, vt = _collapse(q, k, v, sq_p, sk_p)
 
     def kv_map(bh, qi, ki):
         return ((bh // H) * KV + (bh % H) // G, ki, 0)
 
-    out = pl.pallas_call(
-        functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
-                          block_q=bq, block_k=bk, seq_k=Sk),
+    kernel = functools.partial(_flash_kernel, sm_scale=sm_scale,
+                               causal=causal, block_q=bq, block_k=bk,
+                               seq_k=Sk)
+    # the residual output only exists on the training path — forward-only
+    # calls don't pay the (B*H, Sq) f32 write
+    out_specs = [pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B * H, sq_p, Dh), q.dtype)]
+    if return_residuals:
+        out_specs.append(pl.BlockSpec((1, bq),
+                                      lambda bh, qi, ki: (bh, qi)))
+        out_shape.append(jax.ShapeDtypeStruct((B * H, sq_p), F32))
+    else:
+        body = kernel
+        kernel = lambda q_, k_, v_, o, m, l, a: \
+            body(q_, k_, v_, o, None, m, l, a)
+    res = pl.pallas_call(
+        kernel,
         grid=(B * H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
             pl.BlockSpec((1, bk, Dh), kv_map),
             pl.BlockSpec((1, bk, Dh), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, sq_p, Dh), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq, 1), F32),
             pltpu.VMEM((bq, 1), F32),
@@ -119,5 +155,195 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
         ],
         interpret=interpret,
     )(qt, kt, vt)
-    out = out[:, :Sq].reshape(B, H, Sq, Dh)
-    return jnp.moveaxis(out, 1, 2)
+    out = jnp.moveaxis(res[0][:, :Sq].reshape(B, H, Sq, Dh), 1, 2)
+    return (out, res[1]) if return_residuals else out
+
+
+# --------------------------------------------------- recomputation bwd
+
+def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref,
+                     acc_s, *, sm_scale, causal, block_q, block_k, seq_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    run = (qi + 1) * block_q > ki * block_k if causal else ki >= 0
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(F32)
+        k = k_ref[0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * sm_scale
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        do = do_ref[0].astype(F32)
+        p = jnp.exp(s - lse_ref[0][:, None])
+        dp = jax.lax.dot_general(do, v_ref[0].astype(F32),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=F32)
+        ds = p * (dp - dl_ref[0][:, None])
+        acc_s[...] += sm_scale * jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0] = acc_s[...].astype(dq_ref.dtype)
+
+
+def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref,
+                      dv_ref, dk_s, dv_s, *, sm_scale, causal, block_q,
+                      block_k, seq_k):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_s[...] = jnp.zeros_like(dk_s)
+        dv_s[...] = jnp.zeros_like(dv_s)
+
+    run = (qi + 1) * block_q > ki * block_k if causal else qi >= 0
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(F32)
+        k = k_ref[0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * sm_scale
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        do = do_ref[0].astype(F32)
+        p = jnp.exp(s - lse_ref[0][:, None])
+        dv_s[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+        dp = jax.lax.dot_general(do, v_ref[0].astype(F32),
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=F32)
+        ds = p * (dp - dl_ref[0][:, None])
+        dk_s[...] += sm_scale * jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+
+    @pl.when(qi == nq - 1)
+    def _finalize():
+        dk_ref[0] = dk_s[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_s[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _flash_bwd(q, k, v, g, out, lse, *, causal, block_q, block_k,
+               interpret):
+    B, Sq, H, Dh, Sk, KV, G, bq, bk, nq, nk = _shapes(q, k, block_q,
+                                                      block_k)
+    sm_scale = Dh ** -0.5
+    sq_p, sk_p = nq * bq, nk * bk
+    qt, kt, vt = _collapse(q, k, v, sq_p, sk_p)
+    gt = jnp.moveaxis(g, 2, 1).reshape(B * H, Sq, Dh).astype(F32)
+    ot = jnp.moveaxis(out, 2, 1).reshape(B * H, Sq, Dh).astype(F32)
+    delta = (gt * ot).sum(-1)
+    if sq_p != Sq:
+        gt = jnp.pad(gt, ((0, 0), (0, sq_p - Sq), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, sq_p - Sq)))
+
+    def kv_map_q(bh, qi, ki):
+        return ((bh // H) * KV + (bh % H) // G, ki, 0)
+
+    dqt = pl.pallas_call(
+        functools.partial(_flash_dq_kernel, sm_scale=sm_scale,
+                          causal=causal, block_q=bq, block_k=bk, seq_k=Sk),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_map_q),
+            pl.BlockSpec((1, bk, Dh), kv_map_q),
+            pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bq), lambda bh, qi, ki: (bh, qi)),
+            pl.BlockSpec((1, bq), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, sq_p, Dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, Dh), F32)],
+        interpret=interpret,
+    )(qt, kt, vt, gt, lse, delta)
+
+    def kv_map_k(bh, ki, qi):
+        return ((bh // H) * KV + (bh % H) // G, ki, 0)
+
+    dkt, dvt = pl.pallas_call(
+        functools.partial(_flash_dkv_kernel, sm_scale=sm_scale,
+                          causal=causal, block_q=bq, block_k=bk, seq_k=Sk),
+        grid=(B * H, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, ki, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_map_k),
+            pl.BlockSpec((1, bk, Dh), kv_map_k),
+            pl.BlockSpec((1, bq, Dh), lambda bh, ki, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, bq), lambda bh, ki, qi: (bh, qi)),
+            pl.BlockSpec((1, bq), lambda bh, ki, qi: (bh, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, Dh), lambda bh, ki, qi: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda bh, ki, qi: (bh, ki, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B * H, sk_p, Dh), k.dtype),
+                   jax.ShapeDtypeStruct((B * H, sk_p, Dh), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, Dh), F32),
+                        pltpu.VMEM((bk, Dh), F32)],
+        interpret=interpret,
+    )(qt, kt, vt, gt, lse, delta)
+
+    dq = jnp.moveaxis(dqt[:, :Sq].reshape(B, H, Sq, Dh), 1, 2)
+    dk = jnp.moveaxis(
+        dkt[:, :Sk].reshape(B, KV, G, Sk, Dh).sum(2), 1, 2).astype(k.dtype)
+    dv = jnp.moveaxis(
+        dvt[:, :Sk].reshape(B, KV, G, Sk, Dh).sum(2), 1, 2).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_vjp(meta, q, k, v):
+    causal, block_q, block_k, interpret = meta
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)
+
+
+def _flash_vjp_fwd(meta, q, k, v):
+    causal, block_q, block_k, interpret = meta
+    out, lse = flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret,
+                               return_residuals=True)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(meta, res, g):
+    causal, block_q, block_k, interpret = meta
+    q, k, v, out, lse = res
+    return _flash_bwd(q, k, v, g, out, lse, causal=causal, block_q=block_q,
+                      block_k=block_k, interpret=interpret)
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention_vjp(q, k, v, *, causal: bool = True, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """Differentiable flash attention: identical forward, FlashAttention
+    recomputation backward (dQ + transposed-grid dK/dV kernels above)."""
+    return _flash_vjp((causal, block_q, block_k, interpret), q, k, v)

@@ -47,15 +47,30 @@ Legality and fallback policy (never raise, always warn + fall back):
   q/k/v are zero-padded on the lane axis (q pre-scaled so the kernel's
   softmax scale still equals ``Dh**-0.5``) and the output is sliced back.
 
+The legality check is **vjp-aware**: kernel-mode calls are routed through
+the ``custom_vjp``-wrapped kernels (``cluster_attention_bwd`` /
+``flash_attention_vjp``), so ``jax.grad`` stays on the kernel path —
+corners the backward kernels cannot serve (non-float q/k/v, a malformed
+transposed layout) fall back to the differentiable-by-construction jnp
+oracle with a RuntimeWarning *at call time*, instead of raising later
+under ``grad``.
+
 Shape contract of ``cluster_attention`` (the sharded path's ``attn_fn``):
-``(q, k, v, block_idx, buckets, bias_table)`` with q ``(B, S, H, Dh)``,
-k/v ``(B, S, KV, Dh)``; ``block_idx`` either ``(nq, mb)`` (one layout
-shared by the batch — LM local+global mode) or ``(B, nq, mb)`` (per-graph
-layouts — the Pallas path loops the kernel over the batch, the ref path
-consumes the batch dim directly). ``buckets`` carries the extra leading
-batch dim iff ``block_idx`` does; ``bias_table`` is ``(H, n_buckets)``
-where ``H`` is the *local* head count — under the sharded path each
-device passes its own head chunk of the table.
+``(q, k, v, block_idx, buckets, bias_table, block_idx_t)`` with q
+``(B, S, H, Dh)``, k/v ``(B, S, KV, Dh)``; ``block_idx`` either
+``(nq, mb)`` (one layout shared by the batch — LM local+global mode) or
+``(B, nq, mb)`` (per-graph layouts — ONE batched ``pallas_call``, the
+scalar-prefetch grid carries the batch dim; the ref path consumes the
+batch dim directly). ``buckets`` carries the extra leading batch dim iff
+``block_idx`` does; ``bias_table`` is ``(H, n_buckets)`` where ``H`` is
+the *local* head count — under the sharded path each device passes its
+own head chunk of the table. ``block_idx_t`` is the transposed pattern
+``(nk, mt, 2)`` / ``(B, nk, mt, 2)`` the dK/dV backward kernel consumes
+(``core/reformation.transpose_block_idx``); when omitted, the backward
+derives one in-trace at the dense ``mt = nq`` bound — which requires
+duplicate-free rows (no q-row listing the same k-block twice; layout
+builders guarantee this, concrete violations warn-and-fall-back, and a
+*traced* custom layout with duplicates must thread ``block_idx_t``).
 """
 
 from __future__ import annotations
@@ -65,9 +80,10 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dual_attention import cluster_sparse_attention
-from repro.kernels import cluster_attention as _ca
+from repro.kernels import cluster_attention_bwd as _cab
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
@@ -143,6 +159,14 @@ def _no_tpu(mode: str) -> str | None:
     return None
 
 
+def _nonfloat(q, k, v) -> str | None:
+    for name, x in (("q", q), ("k", k), ("v", v)):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return f"kernel vjp path needs floating-point q/k/v, " \
+                   f"{name} is {x.dtype}"
+    return None
+
+
 def _pad_lanes(q, k, v):
     """Zero-pad the head (lane) dim of q/k/v up to a multiple of LANE and
     return an un-pad function for the output. The kernels derive their
@@ -164,30 +188,36 @@ def _pad_lanes(q, k, v):
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
     """Dense flash attention. q ``(B, Sq, H, Dh)``, k/v ``(B, Sk, KV, Dh)``.
     The Pallas path pads ragged sequence tails and non-lane-aligned head
-    dims itself; only a missing TPU forces the ref fallback."""
+    dims itself and is differentiable (``flash_attention_vjp``); a missing
+    TPU or non-float inputs force the ref fallback."""
     mode = resolve_mode("flash_attention")
     reason = _no_tpu(mode)
+    if reason is None and mode != "ref":
+        reason = _nonfloat(q, k, v)
     if reason:
         _fallback("flash_attention", reason)
         mode = "ref"
     if mode == "ref":
         return _ref.flash_attention_ref(q, k, v, causal=causal)
     q, k, v, unpad = _pad_lanes(q, k, v)
-    return unpad(_fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                                     block_k=block_k,
-                                     interpret=(mode == "interpret")))
+    return unpad(_fa.flash_attention_vjp(q, k, v, causal=causal,
+                                         block_q=block_q, block_k=block_k,
+                                         interpret=(mode == "interpret")))
 
 
 # --------------------------------------------------------------- cluster
 
-def _cluster_illegal(q, block_idx, buckets, causal, mode, want_bq,
-                     want_bk) -> str | None:
+def _cluster_illegal(q, k, v, block_idx, buckets, causal, mode, want_bq,
+                     want_bk, block_idx_t=None) -> str | None:
     """Reason the Pallas cluster kernel cannot run this call, or None.
     Block sizes are baked into the layout (they index the pattern), so
     violations here fall back to ref rather than padding. The kernel
     derives bq = S // nq and bk from buckets (= bq without them); caller
     overrides it cannot honor are rejected so ref and kernel modes never
-    silently compute different things."""
+    silently compute different things. The check is vjp-aware: anything
+    the recomputation backward cannot serve (non-float inputs, a
+    malformed transposed layout) is rejected here, at call time, so
+    ``jax.grad`` falls back instead of raising mid-trace."""
     reason = _no_tpu(mode)
     if reason:
         return reason
@@ -214,6 +244,39 @@ def _cluster_illegal(q, block_idx, buckets, causal, mode, want_bq,
     if buckets is not None and buckets.ndim != block_idx.ndim + 2:
         return f"buckets rank {buckets.ndim} does not match block_idx " \
                f"rank {block_idx.ndim}"
+    reason = _nonfloat(q, k, v)
+    if reason:
+        return reason
+    if block_idx_t is None and not isinstance(block_idx, jax.core.Tracer):
+        # the in-trace derived transposed layout stores one visitor per
+        # (q-row, k-block) — a row listing the same k-block twice cannot
+        # be represented at the dense mt = nq bound. The layout builders
+        # never emit duplicates, and this host scan catches every
+        # concrete hand-built one; a TRACED duplicate layout without
+        # block_idx_t is undetectable at trace time and is a documented
+        # contract violation (thread the host-built transposed layout).
+        # Cost note: the sync+sort below runs only on eager concrete
+        # calls — jitted training passes tracers and never pays it.
+        srt = np.sort(np.asarray(block_idx).reshape(-1,
+                                                    block_idx.shape[-1]),
+                      axis=1)
+        if bool(((srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] >= 0)).any()):
+            return "a q-row visits the same k-block twice: the derived " \
+                   "transposed layout cannot represent duplicates — " \
+                   "pass block_idx_t"
+    if block_idx_t is not None:
+        if block_idx_t.ndim != block_idx.ndim + 1 or \
+                block_idx_t.shape[-1] != 2:
+            return f"transposed layout must be (..., nk, mt, 2) with the " \
+                   f"batch dim of block_idx, got shape " \
+                   f"{tuple(block_idx_t.shape)}"
+        if block_idx_t.shape[-3] != S // bk:
+            return f"transposed layout has {block_idx_t.shape[-3]} " \
+                   f"k-block rows, sequence {S} has {S // bk}"
+        if block_idx.ndim == 3 and \
+                block_idx_t.shape[0] != block_idx.shape[0]:
+            return f"transposed layout batch {block_idx_t.shape[0]} != " \
+                   f"block_idx batch {block_idx.shape[0]}"
     return None
 
 
@@ -233,17 +296,24 @@ def _cluster_ref(q, k, v, block_idx, buckets, bias_table, *, causal,
                                     row_chunk=row_chunk)
 
 
-def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
-                      causal=False, row_chunk=8, bq=None, bk=None):
+def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None,
+                      block_idx_t=None, *, causal=False, row_chunk=8,
+                      bq=None, bk=None):
     """Cluster-sparse attention over a reformation layout — the production
     ``attn_fn`` of ``parallel/cluster_parallel.py`` (shape contract in the
     module docstring). ``bq``/``bk`` are only needed when they cannot be
     implied (``bq = S // nq``, ``bk`` from buckets); ``row_chunk`` tunes
-    the ref path's q-row chunking and is ignored by the kernel."""
+    the ref path's q-row chunking and is ignored by the kernel.
+
+    The kernel path is differentiable end-to-end (``custom_vjp`` with
+    FlashAttention-style recomputation — kernels/cluster_attention_bwd);
+    ``block_idx_t`` is the transposed layout its dK/dV kernel consumes
+    (derived in-trace at the dense bound when omitted; the ref path never
+    needs it). Per-graph (3-D) layouts run as ONE batched pallas_call."""
     mode = resolve_mode("cluster_attention")
     if mode != "ref":
-        reason = _cluster_illegal(q, block_idx, buckets, causal, mode,
-                                  bq, bk)
+        reason = _cluster_illegal(q, k, v, block_idx, buckets, causal,
+                                  mode, bq, bk, block_idx_t)
         if reason is not None:
             _fallback("cluster_attention", reason)
             mode = "ref"
@@ -257,21 +327,9 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
         # zero bias; 1-wide table (bucket lookups clamp to row 0)
         bias_table = jnp.zeros((q.shape[2], 1), jnp.float32)
     q, k, v, unpad = _pad_lanes(q, k, v)
-    if block_idx.ndim == 2:
-        out = _ca.cluster_attention(q, k, v, block_idx, buckets, bias_table,
-                                    causal=causal, interpret=interpret)
-    else:
-        # per-graph layouts: the kernel's scalar-prefetch grid is built for
-        # one layout, so run it per batch element (B is small and static)
-        outs = [
-            _ca.cluster_attention(
-                q[b:b + 1], k[b:b + 1], v[b:b + 1], block_idx[b],
-                None if buckets is None else buckets[b], bias_table,
-                causal=causal, interpret=interpret)
-            for b in range(q.shape[0])
-        ]
-        out = jnp.concatenate(outs, axis=0)
-    return unpad(out)
+    return unpad(_cab.cluster_attention_vjp(
+        q, k, v, block_idx, buckets, bias_table, block_idx_t,
+        causal=causal, interpret=interpret))
 
 
 # --------------------------------------------------------------- ssd

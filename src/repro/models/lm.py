@@ -73,7 +73,10 @@ def _lm_sparse_attn_fn(cfg):
                                      n_global=cfg.n_global,
                                      causal=cfg.causal)
         bi = jnp.asarray(lay.block_idx)
-        return kops.cluster_attention(q, k, v, bi, None, None,
+        # static layout => the transposed pattern for the dK/dV backward
+        # kernel is a host constant, not a traced derivation
+        bit = jnp.asarray(lay.block_idx_t)
+        return kops.cluster_attention(q, k, v, bi, None, None, bit,
                                       causal=cfg.causal,
                                       bq=lay.bq, bk=lay.bk)
 

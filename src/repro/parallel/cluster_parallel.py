@@ -34,9 +34,13 @@ legality/fallback rules).
 
 Sharding of the pattern operands inside the shard_map:
 
-* ``block_idx`` / ``buckets`` — batch-sharded with q/k/v (per-graph
-  layouts); the pattern dims are replicated, since they index k-blocks of
-  the full sequence, which every device holds post-a2a;
+* ``block_idx`` / ``buckets`` / ``block_idx_t`` — batch-sharded with
+  q/k/v (per-graph layouts); the pattern dims are replicated, since they
+  index k-blocks of the full sequence, which every device holds post-a2a.
+  ``block_idx_t`` is the transposed pattern the dK/dV backward kernel
+  consumes (kernels/cluster_attention_bwd.py) — threading it here keeps
+  ``jax.value_and_grad`` of the sharded step on the kernel path with the
+  tight host-built layout;
 * ``bias_table`` (H, n_buckets) — sharded over heads on the same axis: the
   a2a hands device i the contiguous head chunk i, which is exactly row
   chunk i of the table (row-major head order is preserved by the reshape
@@ -79,22 +83,27 @@ def _default_attn_fn(causal: bool, row_chunk: int, bq: int, bk: int):
 
 
 def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
-                              bias_table=None, *, mesh, axis: str = "model",
+                              bias_table=None, block_idx_t=None, *,
+                              mesh, axis: str = "model",
                               dp_axes=("data",), bq: int = 128,
                               bk: int = 128, causal: bool = False,
                               row_chunk: int = 8, attn_fn=None):
     """q: (B, S, H, Dh), k/v: (B, S, KV, Dh) — global arrays, sharded
     (batch over ``dp_axes``, sequence over ``axis``) by the shard_map
     in_specs. block_idx: (B, nq, mb) int32; buckets: (B, nq, mb, bq, bk)
-    int8 or None; bias_table: (H, n_buckets) or None.
+    int8 or None; bias_table: (H, n_buckets) or None; block_idx_t:
+    (B, nk, mt, 2) int32 or None — the transposed pattern for the dK/dV
+    backward kernel, batch-sharded like block_idx.
 
-    ``attn_fn(q, k, v, block_idx, buckets, bias_table)`` runs on
-    full-sequence, head-sharded tensors; default is the kernel dispatch
-    layer ``repro.kernels.ops.cluster_attention`` (jnp oracle on CPU, the
-    Pallas cluster kernel on TPU / under ``REPRO_FORCE_PALLAS`` — see the
-    module docstring). ``row_chunk`` tunes the oracle's q-row chunking and
-    is ignored by the kernel. Returns (B, S, H, Dh) with the input
-    sharding.
+    ``attn_fn(q, k, v, block_idx, buckets, bias_table[, block_idx_t])``
+    runs on full-sequence, head-sharded tensors; default is the kernel
+    dispatch layer ``repro.kernels.ops.cluster_attention`` (jnp oracle on
+    CPU, the Pallas cluster kernel on TPU / under ``REPRO_FORCE_PALLAS``
+    — see the module docstring), which is differentiable on every path.
+    The 7th argument is only passed when a transposed layout was
+    supplied, so custom 6-argument ``attn_fn`` callables keep working.
+    ``row_chunk`` tunes the oracle's q-row chunking and is ignored by the
+    kernel. Returns (B, S, H, Dh) with the input sharding.
 
     Falls through to a direct ``attn_fn`` call when the axis is absent or
     size 1; raises ValueError when the shapes cannot shard p ways (use
@@ -106,8 +115,14 @@ def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
     if attn_fn is None:
         attn_fn = _default_attn_fn(causal, row_chunk, bq, bk)
 
+    def call_attn(ql, kl, vl, il, bl, tl, it):
+        if it is None:
+            return attn_fn(ql, kl, vl, il, bl, tl)
+        return attn_fn(ql, kl, vl, il, bl, tl, it)
+
     if p <= 1:
-        return attn_fn(q, k, v, block_idx, buckets, bias_table)
+        return call_attn(q, k, v, block_idx, buckets, bias_table,
+                         block_idx_t)
     if not can_shard_cluster(H, KV, S, p, bq, bk):
         raise ValueError(
             f"cluster attention cannot shard: H={H} KV={KV} S={S} "
@@ -128,15 +143,19 @@ def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
     if bias_table is not None:
         args.append(bias_table)
         specs.append(P(axis, None))
+    if block_idx_t is not None:
+        args.append(block_idx_t)
+        specs.append(P(bspec, None, None, None))
 
     def inner(ql, kl, vl, il, *rest):
         rest = list(rest)
         bl = rest.pop(0) if buckets is not None else None
         tl = rest.pop(0) if bias_table is not None else None
+        it = rest.pop(0) if block_idx_t is not None else None
         # to head-sharded full sequence: the replicated block pattern
         # applies as-is on every device
         ql, kl, vl = seq_to_head_a2a(ql, kl, vl, axis=axis, r=r)
-        ol = attn_fn(ql, kl, vl, il, bl, tl)
+        ol = call_attn(ql, kl, vl, il, bl, tl, it)
         return head_to_seq_a2a(ol, axis=axis)
 
     return compat.shard_map(inner, mesh=mesh, in_specs=tuple(specs),

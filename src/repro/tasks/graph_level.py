@@ -56,12 +56,13 @@ class GraphLevelTask(ElasticTask):
             with_dense_buckets=True, seed=seed) for gs in splits]
         seq_cap = max(p.layout.seq_len for ps in per_batch for p in ps)
         mb_cap = max(p.layout.mb for ps in per_batch for p in ps)
+        mt_cap = max(p.layout.mt for ps in per_batch for p in ps)
         # one _shared cache per mini-batch so its rung-invariant arrays
         # stay aliased across rungs through the pad (upload-deduped)
         padded = []
         for ps in per_batch:
             shared: dict = {}
-            padded.append([pad_graph_batch(p, seq_cap, mb_cap,
+            padded.append([pad_graph_batch(p, seq_cap, mb_cap, mt_cap,
                                            _shared=shared) for p in ps])
         per_batch = padded
         self._set_rungs({bt: [ps[i] for ps in per_batch]

@@ -52,7 +52,8 @@ class NodeTask(ElasticTask):
         if len(seqs) != 1:  # deterministic prep => can't happen; be loud
             raise AssertionError(f"re-layout changed seq_len: {seqs}")
         mb_cap = max(p.layout.mb for p in preps.values())
-        self._set_rungs({bt: [pad_layout_mb(p, mb_cap)]
+        mt_cap = max(p.layout.mt for p in preps.values())
+        self._set_rungs({bt: [pad_layout_mb(p, mb_cap, mt_cap)]
                          for bt, p in preps.items()})
         # held-out labels for eval: the permuted full label vector, with
         # train positions masked out when a train_mask was given

@@ -90,3 +90,37 @@ def test_readme_documents_dispatch_knobs():
     readme = (ROOT / "README.md").read_text()
     for var in [kops._ENV_GLOBAL, *kops._ENV_PER_OP.values()]:
         assert var in readme, f"README.md does not document {var}"
+
+
+def test_architecture_documents_backward_kernel_contract():
+    """The differentiable kernel path is public surface: the backward
+    contract (residuals, transposed layout, vjp fallback policy) must be
+    in docs/architecture.md, and the README dispatch section must say
+    attn_impl now governs training."""
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    for term in ("logsumexp", "block_idx_t", "custom_vjp",
+                 "transpose_block_idx", "cluster_attention_bwd"):
+        assert term in arch, f"architecture.md lost the backward-contract " \
+                             f"term {term!r}"
+    readme = (ROOT / "README.md").read_text()
+    assert "governs training" in readme, (
+        "README.md dispatch section must document that attn_impl governs "
+        "training (the differentiable kernel path)")
+    assert "custom_vjp" in readme
+
+
+def test_benchmarks_doc_documents_bench_json_schema():
+    """docs/benchmarks.md must document both BENCH json artifacts and
+    every key of the schema benchmarks/run.py actually emits."""
+    src = (ROOT / "benchmarks" / "run.py").read_text()
+    m = re.search(r"BENCH_SCHEMA = \(([^)]*)\)", src)
+    assert m, "benchmarks/run.py lost its BENCH_SCHEMA tuple"
+    keys = re.findall(r'"(\w+)"', m.group(1))
+    assert keys, "BENCH_SCHEMA is empty?"
+    doc = (ROOT / "docs" / "benchmarks.md").read_text()
+    for fname in ("BENCH_attention.json", "BENCH_e2e.json"):
+        assert fname in doc, f"docs/benchmarks.md missing {fname}"
+        assert fname in src, f"benchmarks/run.py no longer writes {fname}"
+    missing = [k for k in keys if f"`{k}`" not in doc]  # backticked, so
+    assert not missing, (                               # prose can't fake it
+        f"docs/benchmarks.md missing schema keys: {missing}")
