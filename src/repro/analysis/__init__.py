@@ -1,0 +1,39 @@
+"""Static + trace-level enforcement of the repo's policy invariants.
+
+Two halves, one package:
+
+* ``repro.analysis.lint`` — an AST policy linter with repo-specific
+  rules (``repro.analysis.rules``; REP001–REP005, each carrying the PR
+  whose bug made it necessary, a fix hint, per-line
+  ``# repro-lint: disable=REPxxx`` suppression, and a checked-in
+  baseline). Run it with ``python -m repro.analysis [paths...]``.
+* ``repro.analysis.trace_audit`` — jaxpr/HLO walkers for what statics
+  cannot see: the two-traced-steps invariant (``assert_max_traces``),
+  donated-buffer truth (``check_donation``), and pre-launch shard_map
+  spec validation (``check_shard_specs``).
+
+``lint`` is stdlib-only; ``trace_audit`` needs jax and is re-exported
+lazily so importing the package stays cheap for CLI use.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.lint import (Rule, Violation, baseline_counts,
+                                 default_rules, lint_paths, load_baseline,
+                                 new_violations, write_baseline,
+                                 write_report)
+
+_TRACE_AUDIT = ("TraceAuditError", "assert_max_traces", "check_donation",
+                "check_shard_specs", "donation_report", "primitive_counts",
+                "validate_shard_specs", "walk_jaxpr")
+
+__all__ = ["Rule", "Violation", "baseline_counts", "default_rules",
+           "lint_paths", "load_baseline", "new_violations",
+           "write_baseline", "write_report", *_TRACE_AUDIT]
+
+
+def __getattr__(name):
+    if name in _TRACE_AUDIT:
+        from repro.analysis import trace_audit
+        return getattr(trace_audit, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

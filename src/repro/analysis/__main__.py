@@ -1,0 +1,75 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Lints every ``*.py`` under the given paths (default: ``src``) against
+the policy rules, subtracts the checked-in baseline, optionally writes
+the machine-readable ``ANALYSIS_report.json``, and exits nonzero iff
+new violations exist. ``--update-baseline`` re-baselines the current
+tree (use only with a reviewed justification — the goal is an empty
+baseline)."""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.analysis import lint
+
+_DEFAULT_BASELINE = pathlib.Path(__file__).parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro policy linter (rules REP001-REP005; see "
+                    "docs/architecture.md 'Enforced invariants')")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/dirs to lint (default: src)")
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the machine-readable JSON report here "
+                         "(CI uploads ANALYSIS_report.json)")
+    ap.add_argument("--baseline", metavar="PATH",
+                    default=str(_DEFAULT_BASELINE),
+                    help="baseline JSON (default: the checked-in one); "
+                         "'none' disables baselining")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to accept the current tree")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    rules = lint.default_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.code}  [{r.origin}]  {r.title}\n    fix: {r.fix_hint}")
+        return 0
+
+    baseline_path = None if args.baseline == "none" else args.baseline
+    violations = lint.lint_paths(args.paths, rules=rules)
+
+    if args.update_baseline:
+        if baseline_path is None:
+            print("--update-baseline needs a baseline path", file=sys.stderr)
+            return 2
+        lint.write_baseline(baseline_path, violations)
+        print(f"baseline updated: {len(violations)} violation(s) accepted "
+              f"-> {baseline_path}")
+        return 0
+
+    baseline = lint.load_baseline(baseline_path)
+    fresh = lint.new_violations(violations, baseline)
+
+    if args.report:
+        lint.write_report(args.report, violations, fresh, rules=rules,
+                          paths=[str(p) for p in args.paths])
+
+    for v in fresh:
+        print(v.format())
+    n_base = len(violations) - len(fresh)
+    print(f"repro.analysis: {len(fresh)} new violation(s), "
+          f"{n_base} baselined, {len(rules)} rules")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

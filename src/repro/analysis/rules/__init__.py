@@ -1,0 +1,44 @@
+"""Rule registry + shared AST helpers for the policy linter.
+
+One module per rule; each exposes a ``RULE`` (``repro.analysis.lint.Rule``)
+and is listed here. Codes are stable public surface — docs/architecture.md
+must document every registered code (enforced by tests/test_docs.py).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import (rep001_mesh, rep002_kernels,
+                                  rep003_seq_concat, rep004_traced_cast,
+                                  rep005_task_policy)
+
+RULES = [
+    rep001_mesh.RULE,
+    rep002_kernels.RULE,
+    rep003_seq_concat.RULE,
+    rep004_traced_cast.RULE,
+    rep005_task_policy.RULE,
+]
+
+RULES_BY_CODE = {r.code: r for r in RULES}
+
+__all__ = ["RULES", "RULES_BY_CODE", "dotted", "walk_calls"]
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def walk_calls(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node

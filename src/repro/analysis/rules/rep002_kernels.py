@@ -1,0 +1,75 @@
+"""REP002 — kernels are reached only through the dispatch layer.
+
+Origin: PR 2 (kernel dispatch policy, ROADMAP.md). ``kernels/ops.py``
+resolves ref / interpret / compiled per op, lane-pads unaligned head
+dims, keeps ``jax.grad`` on the ``custom_vjp`` wrappers, and
+warn-and-falls-back on anything the kernels cannot serve. A direct call
+into a kernel module (or the jnp oracles in ``kernels/ref.py``) skips
+all of that — PR 2 existed because model code reading the kernels
+directly went through a stale closure and silently used head-0 bias
+rows. Only ``src/repro/kernels`` itself may import its own modules.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import lint
+
+_KERNEL_MODULES = {"cluster_attention", "cluster_attention_bwd",
+                   "flash_attention", "ref", "ssd"}
+
+
+def _applies(relpath: str) -> bool:
+    return "repro/kernels/" not in relpath
+
+
+def _check(tree: ast.AST, relpath: str):
+    from repro.analysis.rules import dotted
+
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.level == 0:
+            mod = node.module or ""
+            if mod == "repro.kernels":
+                for alias in node.names:
+                    if alias.name in _KERNEL_MODULES:
+                        out.append((node.lineno,
+                                    f"direct import of kernel module "
+                                    f"repro.kernels.{alias.name}"))
+            elif mod.startswith("repro.kernels."):
+                leaf = mod.split(".")[2]
+                if leaf in _KERNEL_MODULES:
+                    out.append((node.lineno,
+                                f"direct import from kernel module {mod}"))
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                parts = alias.name.split(".")
+                if parts[:2] == ["repro", "kernels"] and len(parts) > 2 \
+                        and parts[2] in _KERNEL_MODULES:
+                    out.append((node.lineno,
+                                f"direct import of kernel module "
+                                f"{alias.name}"))
+        elif isinstance(node, ast.Attribute):
+            # only the exact repro.kernels.<mod> node: ast.walk also
+            # visits the nested Attributes of a longer chain, which
+            # would double-report repro.kernels.ref.flash_attention_ref
+            parts = (dotted(node) or "").split(".")
+            if parts[:2] == ["repro", "kernels"] and len(parts) == 3 \
+                    and parts[2] in _KERNEL_MODULES:
+                out.append((node.lineno,
+                            f"direct reference to repro.kernels."
+                            f"{parts[2]}"))
+    return out
+
+
+RULE = lint.Rule(
+    code="REP002",
+    title="kernel modules/oracles are called only via repro.kernels.ops",
+    origin="PR 2",
+    fix_hint="call repro.kernels.ops.{flash_attention,cluster_attention,"
+             "ssd} — the dispatcher picks ref/interpret/compiled, lane-pads, "
+             "stays differentiable, and falls back instead of raising",
+    applies=_applies,
+    check=_check,
+)

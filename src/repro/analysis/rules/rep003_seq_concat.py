@@ -1,0 +1,72 @@
+"""REP003 — no concatenate/stack along the sequence axis in sharded code.
+
+Origin: PR 2 (kernel dispatch policy, ROADMAP.md): ``jnp.concatenate``
+along the model-sharded sequence dim with unaligned piece boundaries
+miscompiles under XLA SPMD on JAX 0.4.x — wrong values, no error. The
+fixed idiom is a masked gather + ``jnp.where`` (see
+``core/graph_model.graph_forward`` global tokens). Model forward /
+parallel code keeps sequences as axis 1 of ``(B, S, ...)`` tensors, so
+this rule flags ``jnp.concatenate`` / ``jnp.stack`` with a literal
+``axis=1`` (and ``jax.lax.concatenate`` with ``dimension=1``) inside
+``parallel/`` and model-forward modules. Host-side ``np.concatenate``
+is fine — only traced ops shard.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import lint
+
+_SCOPES = ("repro/parallel/", "repro/models/")
+_SCOPE_FILES = ("repro/core/graph_model.py", "repro/core/dual_attention.py")
+
+_CONCATS = {"jnp.concatenate", "jnp.stack",
+            "jax.numpy.concatenate", "jax.numpy.stack"}
+_LAX_CONCATS = {"jax.lax.concatenate", "lax.concatenate"}
+
+
+def _applies(relpath: str) -> bool:
+    return any(s in relpath for s in _SCOPES) or \
+        any(relpath.endswith(f) for f in _SCOPE_FILES)
+
+
+def _axis_literal(call: ast.Call, kw_name: str, pos: int):
+    for kw in call.keywords:
+        if kw.arg == kw_name and isinstance(kw.value, ast.Constant):
+            return kw.value.value
+    if len(call.args) > pos and isinstance(call.args[pos], ast.Constant):
+        return call.args[pos].value
+    return None
+
+
+def _check(tree: ast.AST, relpath: str):
+    from repro.analysis.rules import dotted, walk_calls
+
+    out = []
+    for call in walk_calls(tree):
+        name = dotted(call.func)
+        if name in _CONCATS:
+            axis = _axis_literal(call, "axis", 1)
+        elif name in _LAX_CONCATS:
+            axis = _axis_literal(call, "dimension", 1)
+        else:
+            continue
+        if axis == 1:
+            out.append((call.lineno,
+                        f"{name} along axis 1 (the sequence axis) in "
+                        f"sharded model/parallel code"))
+    return out
+
+
+RULE = lint.Rule(
+    code="REP003",
+    title="no seq-axis concatenate/stack in parallel or model-forward code",
+    origin="PR 2",
+    fix_hint="concat along a sharded seq dim miscompiles silently under "
+             "XLA SPMD on JAX 0.4.x — use a masked gather + jnp.where "
+             "(see graph_model.graph_forward), or suppress with a comment "
+             "proving the tensor never carries a sharded sequence",
+    applies=_applies,
+    check=_check,
+)

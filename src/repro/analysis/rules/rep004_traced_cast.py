@@ -1,0 +1,82 @@
+"""REP004 — no host casts of traced values in jit-reachable code.
+
+Origin: PR 5, which fixed a latent ``ConcretizationTypeError``:
+``int(buckets.max())`` as a default inside the jitted step worked until
+the first caller omitted ``bias_table`` under ``jit``. ``int()`` /
+``float()`` / ``bool()`` / ``.item()`` on a tracer raise at trace time —
+or worse, bake in a stale concrete value when tracing is avoided.
+
+Static dataflow is out of reach for a linter, so the rule uses the
+precise signature of the bug class: a builtin cast whose argument
+expression *computes an array value* — it contains an array reduction
+(``.max()``, ``.sum()``, ``.any()``, …) or any ``jnp.`` / ``jax.``
+call — inside the jit-reachable packages (models, kernels, parallel,
+optim, and the traced core modules). Casts of static shapes and config
+scalars (``int(x.shape[0] * f)``, ``bool(cfg.moe_experts)``) pass; every
+``.item()`` call is flagged unconditionally.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import lint
+
+_SCOPES = ("repro/models/", "repro/kernels/", "repro/parallel/",
+           "repro/optim/")
+_SCOPE_FILES = ("repro/core/graph_model.py", "repro/core/dual_attention.py")
+
+_CASTS = {"int", "float", "bool"}
+_REDUCTIONS = {"max", "min", "sum", "mean", "prod", "any", "all",
+               "argmax", "argmin", "item"}
+
+
+def _applies(relpath: str) -> bool:
+    return any(s in relpath for s in _SCOPES) or \
+        any(relpath.endswith(f) for f in _SCOPE_FILES)
+
+
+def _computes_array_value(node: ast.AST) -> str | None:
+    """Reason the expression under a cast is array-flavored, or None."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and \
+                isinstance(sub.func, ast.Attribute) and \
+                sub.func.attr in _REDUCTIONS:
+            return f"contains an array reduction .{sub.func.attr}()"
+        if isinstance(sub, ast.Name) and sub.id in ("jnp", "jax"):
+            return f"contains a {sub.id}.* expression"
+    return None
+
+
+def _check(tree: ast.AST, relpath: str):
+    from repro.analysis.rules import walk_calls
+
+    out = []
+    for call in walk_calls(tree):
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in _CASTS and \
+                len(call.args) == 1 and not call.keywords:
+            reason = _computes_array_value(call.args[0])
+            if reason:
+                out.append((call.lineno,
+                            f"{f.id}() on an array-valued expression "
+                            f"({reason}) in jit-reachable code"))
+        elif isinstance(f, ast.Attribute) and f.attr == "item" and \
+                not call.args and not call.keywords:
+            out.append((call.lineno,
+                        ".item() in jit-reachable code"))
+    return out
+
+
+RULE = lint.Rule(
+    code="REP004",
+    title="no int()/float()/bool()/.item() on traced values under jit",
+    origin="PR 5",
+    fix_hint="keep the value traced (jnp ops, clamped defaults) or hoist "
+             "the cast to host-side prep; a tracer here raises "
+             "ConcretizationTypeError — if the path is provably concrete "
+             "(e.g. guarded by isinstance(x, jax.core.Tracer)), suppress "
+             "with a comment saying so",
+    applies=_applies,
+    check=_check,
+)

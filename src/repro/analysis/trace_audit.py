@@ -1,0 +1,237 @@
+"""Runtime-assisted trace auditing: jaxpr/HLO walkers for the invariants
+a static linter cannot see.
+
+Three auditors, each born from a real regression:
+
+* ``assert_max_traces`` — the two-traced-steps invariant (PR 3/4: an
+  elastic run compiles exactly one program per task loss variant, however
+  often it re-lays out). A context manager over jitted functions that
+  fails if more programs were traced inside the block than budgeted.
+* ``donation_report`` / ``check_donation`` — the PR 3 crash-rescue
+  class: the Trainer donates the state into its step, and the rescue
+  logic *assumes* the buffers really are donated. XLA silently drops a
+  donation it cannot alias (dtype/shape mismatch with every output, or
+  the arg got DCE'd) — memory quietly doubles and the donation-dependent
+  logic rots. The checker lowers + compiles the call and verifies every
+  donated leaf is actually aliased in the executable.
+* ``validate_shard_specs`` / ``check_shard_specs`` — shard_map in/out
+  specs are easy to desync from array ranks when threading a new operand
+  (PR 5 threaded ``block_idx_t`` through every spec list). Validated
+  against the concrete arrays *before* launch, where the error message
+  can name the operand — instead of an opaque XLA rank error after.
+  ``parallel/cluster_parallel.py`` runs this on every sharded call.
+
+Plus the shared jaxpr walker (``walk_jaxpr`` / ``primitive_counts``)
+used to assert what a traced program actually contains.
+
+Everything here needs only ``jax`` — no repro imports — so any module
+(including ``parallel/``) can use it without cycles.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from collections import Counter
+
+import jax
+
+
+class TraceAuditError(AssertionError):
+    """An audited invariant does not hold."""
+
+
+# ------------------------------------------------------------- retraces
+
+def _named_fns(fns) -> dict:
+    if hasattr(fns, "_cache_size"):            # a single jitted callable
+        return {getattr(fns, "__name__", "jitted"): fns}
+    if isinstance(fns, dict):
+        named = dict(fns)
+    else:
+        named = {getattr(f, "__name__", f"jitted[{i}]"): f
+                 for i, f in enumerate(fns)}
+    for name, f in named.items():
+        if not hasattr(f, "_cache_size"):
+            raise TypeError(
+                f"{name!r} has no _cache_size(): pass jax.jit-wrapped "
+                f"callables (got {type(f).__name__})")
+    return named
+
+
+@contextlib.contextmanager
+def assert_max_traces(fns, max_traces: int, *, label: str = "jitted step"):
+    """Fail if more than ``max_traces`` programs are traced inside the
+    block, summed over ``fns`` (one jitted callable, an iterable, or a
+    ``{name: fn}`` dict — e.g. ``trainer._steps``). Counts *new* traces
+    only, so already-warm functions can be audited mid-run::
+
+        with assert_max_traces(trainer._steps, 2):
+            trainer.run()        # re-layouts must swap contents, not shapes
+    """
+    named = _named_fns(fns)
+    before = {name: f._cache_size() for name, f in named.items()}
+    yield
+    grew = {name: f._cache_size() - before[name] for name, f in named.items()}
+    total = sum(grew.values())
+    if total > max_traces:
+        detail = ", ".join(f"{name}: +{n}" for name, n in grew.items() if n)
+        raise TraceAuditError(
+            f"{label}: traced {total} programs inside the audited block "
+            f"(budget {max_traces}) — {detail}. A shape or dtype leaked "
+            f"into the traced signature (pad to one shape budget).")
+
+
+# ---------------------------------------------------------- jaxpr walks
+
+def walk_jaxpr(jaxpr):
+    """Yield every eqn of a (Closed)Jaxpr, recursing into sub-jaxprs
+    (pjit bodies, scan/while/cond branches, custom_vjp calls)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (list, tuple)) else (val,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    yield from walk_jaxpr(sub)
+
+
+def primitive_counts(fn, *args, **kwargs) -> Counter:
+    """Counter of primitive names in ``fn``'s full traced program."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return Counter(eqn.primitive.name for eqn in walk_jaxpr(jaxpr))
+
+
+# ------------------------------------------------------------- donation
+
+@dataclasses.dataclass(frozen=True)
+class DonationReport:
+    """What actually happened to donation at lowering + compile time."""
+
+    n_donated_expected: int   # leaves the caller asked to donate
+    n_donate_annotations: int  # donation attrs that survived lowering
+    aliased_params: frozenset  # param indices aliased in the executable
+
+    @property
+    def ok(self) -> bool:
+        return len(self.aliased_params) >= self.n_donated_expected
+
+    def summary(self) -> str:
+        return (f"donated leaves expected={self.n_donated_expected} "
+                f"lowered={self.n_donate_annotations} "
+                f"aliased={len(self.aliased_params)}")
+
+
+_ALIAS_BLOCK_RE = re.compile(r"input_output_alias=\{(.*?)\},\s*(?:entry|"
+                             r"allow|frontend|is_sched)", re.DOTALL)
+_ALIAS_PARAM_RE = re.compile(r":\s*\(\s*(\d+)\s*,")
+
+
+def donation_report(jitted, *args, donate_argnums=None,
+                    **kwargs) -> DonationReport:
+    """Lower + compile ``jitted(*args, **kwargs)`` and report donation
+    truth. ``donate_argnums`` (defaulting to every argnum, i.e. 'audit
+    whatever the caller marked') sizes the expected-donation set by
+    counting pytree leaves of those args."""
+    lowered = jitted.lower(*args, **kwargs)
+    mlir = lowered.as_text()
+    n_attrs = mlir.count("tf.aliasing_output") + \
+        mlir.count("jax.buffer_donor")
+    hlo = lowered.compile().as_text()
+    m = _ALIAS_BLOCK_RE.search(hlo)
+    aliased = frozenset(int(p) for p in
+                        _ALIAS_PARAM_RE.findall(m.group(1))) if m \
+        else frozenset()
+    if donate_argnums is None:
+        expected = n_attrs
+    else:
+        expected = sum(len(jax.tree_util.tree_leaves(args[i]))
+                       for i in donate_argnums)
+    return DonationReport(expected, n_attrs, aliased)
+
+
+def check_donation(jitted, *args, donate_argnums,
+                   **kwargs) -> DonationReport:
+    """Raise TraceAuditError unless every leaf of the ``donate_argnums``
+    args is actually aliased to an output in the compiled executable —
+    i.e. the donation the code *relies on* (crash rescue, memory budget)
+    really happened, instead of being silently dropped by XLA."""
+    rep = donation_report(jitted, *args, donate_argnums=donate_argnums,
+                          **kwargs)
+    if not rep.ok:
+        raise TraceAuditError(
+            f"donation audit failed: {rep.summary()} — XLA dropped "
+            f"{rep.n_donated_expected - len(rep.aliased_params)} donated "
+            f"buffer(s) (no output with matching shape/dtype, or the arg "
+            f"was unused). Donation-dependent logic (crash rescue, memory "
+            f"budget) would silently misbehave.")
+    return rep
+
+
+# ----------------------------------------------------------- shard specs
+
+def _spec_entries(spec):
+    if spec is None:
+        return ()
+    return tuple(spec)
+
+
+def validate_shard_specs(mesh, specs, arrays, *,
+                         role: str = "in", names=None) -> list[str]:
+    """Pre-launch validation of shard_map partition specs against the
+    concrete arrays they will split: spec rank must not exceed array
+    rank, every named mesh axis must exist, and the product of axis
+    sizes on a dim must divide that dim. Returns human-readable problem
+    strings (empty = legal)."""
+    problems = []
+    specs = list(specs)
+    arrays = list(arrays)
+    names = list(names) if names is not None else \
+        [f"{role}_specs[{i}]" for i in range(len(specs))]
+    if len(specs) != len(arrays):
+        return [f"{role}_specs has {len(specs)} specs for "
+                f"{len(arrays)} operands"]
+    for name, spec, arr in zip(names, specs, arrays):
+        entries = _spec_entries(spec)
+        ndim = getattr(arr, "ndim", None)
+        shape = getattr(arr, "shape", None)
+        if ndim is None:
+            problems.append(f"{name}: operand has no ndim/shape "
+                            f"({type(arr).__name__})")
+            continue
+        if len(entries) > ndim:
+            problems.append(
+                f"{name}: spec {spec} names {len(entries)} dims but the "
+                f"operand is rank {ndim} (shape {tuple(shape)})")
+            continue
+        for dim, entry in enumerate(entries):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            size = 1
+            for ax in axes:
+                if ax not in mesh.shape:
+                    problems.append(
+                        f"{name}: spec {spec} uses mesh axis {ax!r} which "
+                        f"is not in mesh {dict(mesh.shape)}")
+                    size = 0
+                    break
+                size *= mesh.shape[ax]
+            if size and shape[dim] % size:
+                problems.append(
+                    f"{name}: dim {dim} of shape {tuple(shape)} is not "
+                    f"divisible by {size} ({entry!r} of mesh "
+                    f"{dict(mesh.shape)})")
+    return problems
+
+
+def check_shard_specs(mesh, specs, arrays, *, role: str = "in",
+                      names=None) -> None:
+    """Raise TraceAuditError (naming every offending operand) when the
+    specs cannot legally split the arrays over the mesh."""
+    problems = validate_shard_specs(mesh, specs, arrays, role=role,
+                                    names=names)
+    if problems:
+        raise TraceAuditError(
+            "shard_map spec audit failed:\n  " + "\n  ".join(problems))

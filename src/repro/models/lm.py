@@ -213,7 +213,16 @@ def _embed_inputs(p, cfg, batch, dtype):
         patches = batch["patches"].astype(dtype)
         proj = jnp.einsum("btd,de->bte", patches,
                           p["frontend_proj"]["w"].astype(dtype))
-        h = jnp.concatenate([proj, h], axis=1)
+        # prepend the frontend tokens WITHOUT a concatenate: concat along
+        # the (model-)sharded sequence dim with unaligned piece boundaries
+        # (Tp is rarely shard-aligned) miscompiles under XLA SPMD on JAX
+        # 0.4.x — gather both pieces to full length and mask-select, the
+        # same idiom as graph_model.graph_forward global tokens (REP003).
+        tp = proj.shape[1]
+        pos = jnp.arange(tp + h.shape[1])
+        pg = jnp.take(proj, jnp.minimum(pos, tp - 1), axis=1)
+        hg = jnp.take(h, jnp.clip(pos - tp, 0, h.shape[1] - 1), axis=1)
+        h = jnp.where((pos < tp)[None, :, None], pg, hg)
     return h
 
 

@@ -176,6 +176,9 @@ def mamba_decode(p, cfg, h, cache):
     zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(dt_))
     z, xi, b, c, dtp = _split_proj(p, cfg, zxbcdt)
     xbc = jnp.concatenate([xi, b, c], axis=-1)[:, 0]          # (B,conv_dim)
+    # axis 1 here is the K-1 conv-history window of the single-device
+    # decode cache, not a sharded sequence, so the SPMD concat miscompile
+    # cannot apply.  # repro-lint: disable=REP003
     conv_hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
     w = p["conv_w"].astype(dt_)                                # (K,C)
     conv_out = jnp.einsum("bkc,kc->bc", conv_hist, w) \

@@ -28,11 +28,6 @@ def _quantize8(x: jnp.ndarray):
     return q.astype(jnp.int8), scale.astype(F32)
 
 
-def _dequantize8(q, scale, shape):
-    fp = q.astype(F32) * scale
-    return fp.reshape(-1)[: int(jnp.prod(jnp.array(shape)))].reshape(shape)
-
-
 def _deq_static(q, scale, shape):
     n = 1
     for s in shape:

@@ -56,6 +56,7 @@ import functools
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.analysis.trace_audit import check_shard_specs
 from repro.parallel.ulysses import (_fit_dp, can_ulysses, head_to_seq_a2a,
                                     seq_to_head_a2a)
 
@@ -158,5 +159,13 @@ def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
         ol = call_attn(ql, kl, vl, il, bl, tl, it)
         return head_to_seq_a2a(ol, axis=axis)
 
+    # audit the specs against the concrete operands before launch: a spec
+    # desynced from an operand rank (the PR 5 block_idx_t threading class)
+    # fails here with the operand's name instead of an opaque XLA error
+    names = ["q", "k", "v", "block_idx"]
+    names += ["buckets"] if buckets is not None else []
+    names += ["bias_table"] if bias_table is not None else []
+    names += ["block_idx_t"] if block_idx_t is not None else []
+    check_shard_specs(mesh, specs, args, names=names)
     return compat.shard_map(inner, mesh=mesh, in_specs=tuple(specs),
                             out_specs=seq_spec)(*args)

@@ -1,0 +1,466 @@
+"""repro.analysis: policy linter (REP001-REP005) + trace auditor.
+
+Every rule gets a positive (fires on a minimal violation) and a negative
+(clean idiomatic code passes) fixture test; fixtures are written into a
+tmp tree with repo-like relative paths and linted with ``root=tmp`` so
+the same scoping logic runs as on the real tree. The suite ends with the
+tier-1 gate: the real repo lints clean against the checked-in baseline.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import types
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import compat
+from repro.analysis import lint, trace_audit as ta
+from repro.analysis.rules import RULES, RULES_BY_CODE
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BASELINE = REPO / "src" / "repro" / "analysis" / "baseline.json"
+
+
+# ------------------------------------------------------------- fixtures
+
+def _lint_tree(tmp_path, files, rules=None):
+    """Write ``{relpath: source}`` into tmp and lint with root=tmp."""
+    for rel, src in files.items():
+        f = tmp_path / rel
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(textwrap.dedent(src))
+    return lint.lint_paths([tmp_path], root=tmp_path, rules=rules)
+
+
+def _codes(violations):
+    return [v.code for v in violations]
+
+
+def test_rule_registry_is_complete():
+    codes = [r.code for r in RULES]
+    assert codes == sorted(set(codes)), "duplicate or unsorted rule codes"
+    assert codes == ["REP001", "REP002", "REP003", "REP004", "REP005"]
+    for r in RULES:
+        assert r.title and r.origin and r.fix_hint
+        assert RULES_BY_CODE[r.code] is r
+
+
+# ------------------------------------------------- REP001: compat shim
+
+def test_rep001_fires_on_direct_mesh_apis(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/parallel/bad.py": """\
+        import jax
+        from jax.experimental.shard_map import shard_map
+
+        def f(devs):
+            mesh = jax.make_mesh((1,), ("x",))
+            with jax.sharding.use_mesh(mesh):
+                return jax.sharding.Mesh(devs, ("x",))
+        """})
+    hits = [v for v in vs if v.code == "REP001"]
+    assert len(hits) == 4, [v.format() for v in vs]
+    assert all("compat" in v.fix_hint for v in hits)
+
+
+def test_rep001_clean_inside_compat_and_via_shim(tmp_path):
+    vs = _lint_tree(tmp_path, {
+        # the shim itself is the one legal home of the drifting spellings
+        "src/repro/compat/__init__.py": """\
+            import jax
+            _MAKE_MESH = getattr(jax, "make_mesh", None)
+            mesh = jax.sharding.Mesh
+            """,
+        # everyone else goes through it
+        "src/repro/parallel/good.py": """\
+            from repro import compat
+
+            def f():
+                return compat.make_mesh((1,), ("x",))
+            """,
+    })
+    assert "REP001" not in _codes(vs), [v.format() for v in vs]
+
+
+# --------------------------------------------- REP002: kernel dispatch
+
+def test_rep002_fires_on_direct_kernel_imports(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/models/bad.py": """\
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels import ref
+        import repro.kernels.ssd
+
+        def f(q, k, v):
+            return repro.kernels.cluster_attention.cluster_attention(q, k, v)
+        """})
+    hits = [v for v in vs if v.code == "REP002"]
+    assert len(hits) == 4, [v.format() for v in vs]
+
+
+def test_rep002_clean_via_ops_and_inside_kernels(tmp_path):
+    vs = _lint_tree(tmp_path, {
+        "src/repro/models/good.py": """\
+            from repro.kernels import ops
+
+            def f(q, k, v):
+                return ops.flash_attention(q, k, v)
+            """,
+        # the kernels package may import its own modules
+        "src/repro/kernels/ops.py": """\
+            from repro.kernels.flash_attention import flash_attention
+            from repro.kernels import ref
+            """,
+    })
+    assert "REP002" not in _codes(vs), [v.format() for v in vs]
+
+
+# ------------------------------------------- REP003: seq-axis concat
+
+def test_rep003_fires_on_seq_axis_concat(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/models/bad.py": """\
+        import jax
+        import jax.numpy as jnp
+
+        def f(a, b):
+            h = jnp.concatenate([a, b], axis=1)
+            h = jnp.stack([a, b], 1)
+            return jax.lax.concatenate([a, b], dimension=1)
+        """})
+    hits = [v for v in vs if v.code == "REP003"]
+    assert len(hits) == 3, [v.format() for v in vs]
+
+
+def test_rep003_clean_on_other_axes_and_out_of_scope(tmp_path):
+    vs = _lint_tree(tmp_path, {
+        "src/repro/models/good.py": """\
+            import jax.numpy as jnp
+
+            def f(a, b):
+                h = jnp.concatenate([a, b], axis=0)
+                return jnp.stack([a, b], axis=-1)
+            """,
+        # host-side data prep is out of scope (nothing shards there)
+        "src/repro/core/graph.py": """\
+            import jax.numpy as jnp
+
+            def f(a, b):
+                return jnp.concatenate([a, b], axis=1)
+            """,
+    })
+    assert "REP003" not in _codes(vs), [v.format() for v in vs]
+
+
+# ------------------------------------------- REP004: traced host casts
+
+def test_rep004_fires_on_traced_casts(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/models/bad.py": """\
+        import jax.numpy as jnp
+
+        def f(buckets, x):
+            n = int(buckets.max()) + 1          # the PR 5 bug, verbatim
+            p = float(jnp.mean(x))
+            return n, p, x.item()
+        """})
+    hits = [v for v in vs if v.code == "REP004"]
+    assert len(hits) == 3, [v.format() for v in vs]
+
+
+def test_rep004_clean_on_static_shapes_and_config(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/models/good.py": """\
+        def f(flat, cfg, frac):
+            n = int(flat.shape[0] * frac)       # static shape arithmetic
+            use_moe = bool(cfg.moe_experts)     # config scalar
+            return n, use_moe, float(frac)
+        """})
+    assert "REP004" not in _codes(vs), [v.format() for v in vs]
+
+
+# --------------------------------------------- REP005: task-layer policy
+
+def test_rep005_fires_on_family_branches_and_loss_dense(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/runtime/trainer.py": """\
+        def step(self, task, model):
+            if isinstance(task, NodeTask):
+                return model.loss_dense
+            return model.family
+        """})
+    hits = [v for v in vs if v.code == "REP005"]
+    msgs = " | ".join(v.message for v in hits)
+    assert len(hits) == 3, [v.format() for v in vs]
+    assert "loss_dense" in msgs and "NodeTask" in msgs and ".family" in msgs
+
+
+def test_rep005_clean_trainer_and_registry_dispatch(tmp_path):
+    vs = _lint_tree(tmp_path, {
+        "src/repro/runtime/trainer.py": """\
+            def step(self, task, model, variant):
+                return model.loss_variants[variant]
+            """,
+        # the model registry is the one legal home of family dispatch
+        "src/repro/models/api.py": """\
+            def build(cfg):
+                return REGISTRY[cfg.family](cfg)
+            """,
+    })
+    assert "REP005" not in _codes(vs), [v.format() for v in vs]
+
+
+# ------------------------------------- suppression / baseline / REP000
+
+_BAD_CONCAT = """\
+    import jax.numpy as jnp
+
+    def f(a, b):
+        return jnp.concatenate([a, b], axis=1){}
+    """
+
+
+def test_suppression_inline_and_comment_line(tmp_path):
+    # inline on the flagged line
+    vs = _lint_tree(tmp_path, {"src/repro/models/a.py": _BAD_CONCAT.format(
+        "  # repro-lint: disable=REP003")})
+    assert not vs, [v.format() for v in vs]
+    # on a pure comment line directly above (the long-statement style)
+    vs = _lint_tree(tmp_path, {"src/repro/models/b.py": """\
+        import jax.numpy as jnp
+
+        def f(a, b):
+            # decode cache append, never sharded.  # repro-lint: disable=REP003
+            return jnp.concatenate([a, b], axis=1)
+        """})
+    assert not vs, [v.format() for v in vs]
+    # suppressing a different code does NOT silence the hit
+    vs = _lint_tree(tmp_path, {"src/repro/models/c.py": _BAD_CONCAT.format(
+        "  # repro-lint: disable=REP004")})
+    assert _codes(vs) == ["REP003"], [v.format() for v in vs]
+
+
+def test_baseline_ratchets_on_counts(tmp_path):
+    files = {"src/repro/models/bad.py": _BAD_CONCAT.format("")}
+    vs = _lint_tree(tmp_path, files)
+    assert len(vs) == 1
+    base_path = tmp_path / "baseline.json"
+    lint.write_baseline(base_path, vs)
+    baseline = lint.load_baseline(base_path)
+    assert baseline == {"src/repro/models/bad.py::REP003": 1}
+    # the baselined tree passes...
+    assert lint.new_violations(vs, baseline) == []
+    # ...but a second violation of the same (path, code) is fresh
+    files["src/repro/models/bad.py"] += (
+        "\n"
+        "    def g(a, b):\n"
+        "        return jnp.stack([a, b], axis=1)\n")
+    vs2 = _lint_tree(tmp_path, files)
+    assert len(vs2) == 2
+    assert len(lint.new_violations(vs2, baseline)) == 2  # all hits reported
+    # a missing baseline file means an empty baseline
+    assert lint.load_baseline(tmp_path / "nope.json") == {}
+
+
+def test_syntax_error_reports_rep000(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/models/broken.py":
+                               "def f(:\n    pass\n"})
+    assert _codes(vs) == ["REP000"]
+
+
+# ------------------------------------------------------------------ CLI
+
+def _run_cli(*argv, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_exits_zero_on_clean_tree(tmp_path):
+    (tmp_path / "ROADMAP.md").write_text("fixture root marker\n")
+    good = tmp_path / "src" / "repro" / "models" / "good.py"
+    good.parent.mkdir(parents=True)
+    good.write_text("from repro.kernels import ops\n")
+    r = _run_cli(str(tmp_path), "--baseline", "none")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 new violation(s)" in r.stdout
+
+
+def test_cli_exits_nonzero_on_injected_violation(tmp_path):
+    (tmp_path / "ROADMAP.md").write_text("fixture root marker\n")
+    bad = tmp_path / "src" / "repro" / "models" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(textwrap.dedent(_BAD_CONCAT.format("")))
+    report = tmp_path / "ANALYSIS_report.json"
+    r = _run_cli(str(tmp_path), "--baseline", "none",
+                 "--report", str(report))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REP003" in r.stdout and "hint:" in r.stdout
+    # machine-readable report: schema CI consumers rely on
+    doc = json.loads(report.read_text())
+    assert doc["tool"] == "repro.analysis" and doc["ok"] is False
+    assert {r_["code"] for r_ in doc["rules"]} == set(RULES_BY_CODE)
+    assert all({"code", "title", "origin", "fix_hint"} <= set(r_)
+               for r_ in doc["rules"])
+    (v,) = doc["new_violations"]
+    assert v["code"] == "REP003" and v["line"] == 4
+    assert doc["counts"] == {"src/repro/models/bad.py::REP003": 1}
+
+
+def test_cli_update_baseline_roundtrip(tmp_path):
+    (tmp_path / "ROADMAP.md").write_text("fixture root marker\n")
+    bad = tmp_path / "src" / "repro" / "models" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(textwrap.dedent(_BAD_CONCAT.format("")))
+    base = tmp_path / "baseline.json"
+    r = _run_cli(str(tmp_path), "--baseline", str(base), "--update-baseline")
+    assert r.returncode == 0, r.stdout + r.stderr
+    # the same tree now passes against its baseline
+    r = _run_cli(str(tmp_path), "--baseline", str(base))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "1 baselined" in r.stdout
+
+
+def test_cli_list_rules():
+    r = _run_cli("--list-rules")
+    assert r.returncode == 0
+    for code in RULES_BY_CODE:
+        assert code in r.stdout
+
+
+# --------------------------------------------------- the tier-1 gate
+
+def test_repo_tree_lints_clean():
+    """The real tree has no violations beyond the checked-in baseline —
+    the same sweep CI runs. In-process (no subprocess) so a failure
+    shows the violations in the assertion message."""
+    paths = [p for p in ("src", "benchmarks", "examples", "tests")
+             if (REPO / p).exists()]
+    vs = lint.lint_paths([REPO / p for p in paths], root=REPO)
+    fresh = lint.new_violations(vs, lint.load_baseline(BASELINE))
+    assert not fresh, "\n".join(v.format() for v in fresh)
+
+
+def test_checked_in_baseline_is_empty():
+    """The tree the linter landed on is clean; the baseline exists only
+    as a ratchet mechanism for future emergencies."""
+    assert lint.load_baseline(BASELINE) == {}
+
+
+# ===================================================== trace auditor
+
+
+def test_assert_max_traces_passes_within_budget():
+    f = jax.jit(lambda x: x * 2)
+    with ta.assert_max_traces(f, 1):
+        f(jnp.ones((4,)))
+        f(jnp.ones((4,)))          # cache hit, not a new trace
+    # already-warm functions audit mid-run: zero new traces expected
+    with ta.assert_max_traces({"dense": f}, 0, label="warm step"):
+        f(jnp.ones((4,)))
+
+
+def test_assert_max_traces_catches_retrace_leak():
+    f = jax.jit(lambda x: x * 2)
+    with pytest.raises(ta.TraceAuditError, match="budget 1"):
+        with ta.assert_max_traces(f, 1, label="elastic step"):
+            for n in (3, 4, 5):    # shape leaked into the signature
+                f(jnp.ones((n,)))
+
+
+def test_assert_max_traces_rejects_unjitted():
+    with pytest.raises(TypeError, match="_cache_size"):
+        with ta.assert_max_traces({"raw": lambda x: x}, 1):
+            pass
+
+
+def test_walk_jaxpr_recurses_into_scan():
+    def f(x):
+        return jnp.sin(x) + jax.lax.scan(
+            lambda c, _: (c * 2, c), x, None, length=3)[0]
+
+    counts = ta.primitive_counts(f, jnp.ones((2,)))
+    assert counts["sin"] == 1 and counts["scan"] == 1
+    assert counts["mul"] >= 1    # from *inside* the scan body
+
+
+def test_check_donation_passes_on_trainer_style_state():
+    step = jax.jit(
+        lambda s, b: {"p": s["p"] - b.mean(), "step": s["step"] + 1},
+        donate_argnums=(0,))
+    state = {"p": jnp.ones((8,)), "step": jnp.zeros((), jnp.int32)}
+    rep = ta.check_donation(step, state, jnp.ones((8,)), donate_argnums=(0,))
+    assert rep.ok and len(rep.aliased_params) == 2
+    assert "expected=2" in rep.summary()
+
+
+def test_check_donation_catches_dropped_donation():
+    # no output matches the donated buffer's shape -> XLA silently drops
+    # the donation; the checker must turn that into a hard failure
+    step = jax.jit(lambda s, b: (s * 2.0).sum() + b.sum(),
+                   donate_argnums=(0,))
+    with warnings.catch_warnings():
+        # jax itself warns 'Some donated buffers were not usable' at
+        # lowering; the audit error is the signal under test
+        warnings.simplefilter("ignore")
+        with pytest.raises(ta.TraceAuditError, match="donation audit"):
+            ta.check_donation(step, jnp.ones((3, 5)), jnp.ones((2,)),
+                              donate_argnums=(0,))
+
+
+def test_validate_shard_specs_flags_each_problem_class():
+    from jax.sharding import PartitionSpec as P
+    mesh = types.SimpleNamespace(shape={"model": 4, "data": 2})
+    arrays = [jnp.ones((2, 8)), jnp.ones((3,)), jnp.ones((2, 2)),
+              jnp.ones((2, 6))]
+    specs = [P(None, "model"),        # ok
+             P("nope"),               # unknown mesh axis
+             P(None, None, None),     # rank 3 spec on rank 2 operand
+             P(None, ("model", "data"))]  # 6 % (4*2) != 0
+    probs = ta.validate_shard_specs(mesh, specs, arrays,
+                                    names=["q", "k", "v", "bias"])
+    assert len(probs) == 3, probs
+    assert any("k: " in p and "'nope'" in p for p in probs)
+    assert any("v: " in p and "rank 2" in p for p in probs)
+    assert any("bias: " in p and "divisible" in p for p in probs)
+    # spec/operand count mismatch short-circuits with one message
+    assert ta.validate_shard_specs(mesh, specs[:2], arrays) \
+        == ["in_specs has 2 specs for 4 operands"]
+
+
+def test_check_shard_specs_clean_and_raising():
+    from jax.sharding import PartitionSpec as P
+    mesh = compat.make_mesh((1,), ("model",))
+    ok = [jnp.ones((2, 4, 8)), jnp.ones((8, 3))]
+    ta.check_shard_specs(mesh, [P(None, "model", None), P("model", None)],
+                         ok, names=["q", "bias"])   # must not raise
+    with pytest.raises(ta.TraceAuditError, match="bias.*rank 2"):
+        ta.check_shard_specs(mesh, [P(None, "model", None),
+                                    P("model", None, None)],
+                             ok, names=["q", "bias"])
+
+
+def test_sharded_cluster_attention_names_bad_operand():
+    """The wired-in audit in parallel/cluster_parallel.py: a desynced
+    spec fails *before* launch with the operand's name, not as an
+    opaque XLA rank error. A 2-way mesh stub (the audit only reads
+    ``mesh.shape``, and it raises before shard_map is reached) lets a
+    single-device run exercise the sharded path's spec check with a
+    block_idx corrupted to the wrong rank — the PR 5 threading class."""
+    from repro.parallel.cluster_parallel import sharded_cluster_attention
+    mesh = types.SimpleNamespace(shape={"model": 2})
+    q = jnp.ones((1, 128, 2, 8))
+    bad_bi = jnp.zeros((2, 2), jnp.int32)      # rank 2, spec expects 3
+    with pytest.raises(ta.TraceAuditError, match="block_idx.*rank 2"):
+        sharded_cluster_attention(q, q, q, bad_bi, mesh=mesh, bq=64,
+                                  bk=64, row_chunk=4)
+    # and the p == 1 short-circuit still runs the plain path fine
+    mesh1 = compat.make_mesh((1,), ("model",))
+    bi = jnp.zeros((1, 2, 2), jnp.int32)
+    out = sharded_cluster_attention(q, q, q, bi, mesh=mesh1, bq=64, bk=64,
+                                    row_chunk=4)
+    assert out.shape == q.shape

@@ -109,6 +109,32 @@ def test_architecture_documents_backward_kernel_contract():
     assert "custom_vjp" in readme
 
 
+def test_architecture_documents_every_lint_rule():
+    """Rule codes are stable public surface: every rule registered in
+    repro.analysis.rules must appear (with its origin PR) in the
+    'Enforced invariants' section of docs/architecture.md, and the
+    README must point at the CLI — a new rule cannot ship undocumented."""
+    from repro.analysis.rules import RULES
+
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "## Enforced invariants" in arch
+    for rule in RULES:
+        assert f"`{rule.code}`" in arch, (
+            f"docs/architecture.md 'Enforced invariants' is missing "
+            f"{rule.code} ({rule.title})")
+        assert rule.origin in arch, (
+            f"docs/architecture.md does not name {rule.code}'s origin "
+            f"({rule.origin})")
+    readme = (ROOT / "README.md").read_text()
+    assert "python -m repro.analysis" in readme, (
+        "README.md does not document the python -m repro.analysis CLI")
+    # the auditor surface the docs promise must exist
+    from repro.analysis import trace_audit
+    for name in ("assert_max_traces", "check_donation",
+                 "check_shard_specs", "walk_jaxpr"):
+        assert name in arch and hasattr(trace_audit, name)
+
+
 def test_benchmarks_doc_documents_bench_json_schema():
     """docs/benchmarks.md must document both BENCH json artifacts and
     every key of the schema benchmarks/run.py actually emits."""
