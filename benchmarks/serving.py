@@ -1,0 +1,156 @@
+"""Serving benchmark: throughput and latency percentiles vs offered load.
+
+Drives the production engine (``repro.serve.ServeEngine``: chunked
+prefill + paged KV cache) with Poisson-free deterministic arrivals at a
+sweep of offered loads, and the GraphServe node/link endpoints with
+repeated queries, emitting one record per (endpoint, load):
+
+  PYTHONPATH=src python benchmarks/serving.py            # CSV lines
+  PYTHONPATH=src python benchmarks/serving.py --json     # + BENCH_serve.json
+
+Schema (documented in docs/benchmarks.md): ``SERVE_SCHEMA`` keys per
+record; latencies are wall milliseconds on the current backend — as with
+BENCH_attention.json, the *trajectory* across commits is the signal, not
+the absolute numbers. The engine is reused across load levels, so the
+sweep itself re-proves the two-traced-programs invariant (a warm
+engine's ``run()`` audits with budget 0).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SERVE_SCHEMA = ("endpoint", "offered_rps", "requests", "req_per_s",
+                "tok_per_s", "p50_ms", "p99_ms", "ttft_p50_ms")
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(len(xs) * q))]
+
+
+def _record(endpoint, offered_rps, requests, req_per_s, tok_per_s,
+            p50_ms, p99_ms, ttft_p50_ms):
+    rec = dict(zip(SERVE_SCHEMA, (endpoint, offered_rps, requests,
+                                  req_per_s, tok_per_s, p50_ms, p99_ms,
+                                  ttft_p50_ms)))
+    print(f"serve_bench,{endpoint},rps={offered_rps},"
+          f"req_per_s={req_per_s:.2f},p50_ms={p50_ms:.1f},"
+          f"p99_ms={p99_ms:.1f}", flush=True)
+    return rec
+
+
+def _lm_records(*, full: bool) -> list[dict]:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models import build
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke_config("qwen3_0_6b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=4, page=8, chunk=8,
+                      max_len=64)
+    n_req = 16 if full else 8
+    max_tokens = 8
+    loads = (2.0, 8.0, 0.0)      # offered req/s; 0.0 = all-at-once burst
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size // 4,
+                            rng.integers(4, 13)).tolist()
+               for _ in range(n_req)]
+    # warm the two programs outside the measured sweep
+    eng.submit("warm", prompts[0], 2)
+    eng.run()
+    records = []
+    for rps in loads:
+        gap = 1.0 / rps if rps else 0.0
+        seen = len(eng.request_stats)
+        for rid, p in enumerate(prompts):
+            eng.submit((rps, rid), p, max_tokens, arrival=rid * gap)
+        stats = eng.run()
+        new = eng.request_stats[seen:]
+        lat = [r["latency_s"] for r in new]
+        ttft = [r["ttft_s"] for r in new]
+        span = max(r["t_done"] for r in new)
+        records.append(_record(
+            "lm_paged", rps, n_req, n_req / max(span, 1e-9),
+            stats["tok_per_s"], _pct(lat, 0.5) * 1e3,
+            _pct(lat, 0.99) * 1e3, _pct(ttft, 0.5) * 1e3))
+    assert eng.traced_programs() == 2, eng.traced_programs()
+    return records
+
+
+def _graph_records(*, full: bool) -> list[dict]:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core.graph import sbm_graph
+    from repro.models import build
+    from repro.serve import GraphServe
+
+    cfg = get_smoke_config("graphormer_slim")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    g = sbm_graph(192 if full else 96, 4, p_in=0.05, p_out=0.003,
+                  feat_dim=cfg.feat_dim, n_classes=cfg.n_classes, seed=0)
+    srv = GraphServe(model, params)
+    rng = np.random.default_rng(0)
+    n_q = 16 if full else 8
+    srv.node(g, [0])             # pay reformation + compile once
+    srv.link(g, [0], [1])
+    records = []
+    for endpoint, query in (
+            ("graph_node", lambda: srv.node(g, rng.integers(0, g.n, 8))),
+            ("graph_link", lambda: srv.link(g, rng.integers(0, g.n, 8),
+                                            rng.integers(0, g.n, 8)))):
+        lat = []
+        t0 = time.perf_counter()
+        for _ in range(n_q):
+            t = time.perf_counter()
+            query()
+            lat.append(time.perf_counter() - t)
+        span = time.perf_counter() - t0
+        records.append(_record(
+            endpoint, None, n_q, n_q / max(span, 1e-9), None,
+            _pct(lat, 0.5) * 1e3, _pct(lat, 0.99) * 1e3, None))
+    assert srv.n_cached_layouts() == 1   # every query hit one layout
+    return records
+
+
+def write_serve_json(out_dir: str = ".", *, full: bool = False) -> None:
+    """Write BENCH_serve.json into ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    records = _lm_records(full=full) + _graph_records(full=full)
+    path = os.path.join(out_dir, "BENCH_serve.json")
+    with open(path, "w") as fh:
+        json.dump({"schema": list(SERVE_SCHEMA), "records": records},
+                  fh, indent=2)
+    print(f"# wrote {path} ({len(records)} records)", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_serve.json (CI artifact mode)")
+    ap.add_argument("--json-dir", default=".")
+    args = ap.parse_args()
+    if args.json:
+        write_serve_json(args.json_dir, full=args.full)
+    else:
+        _lm_records(full=args.full)
+        _graph_records(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

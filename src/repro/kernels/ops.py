@@ -2,7 +2,8 @@
 
 Every attention/SSD call in the codebase goes through this module instead
 of picking an implementation at the call site. Each public op —
-``flash_attention``, ``cluster_attention``, ``ssd`` — resolves an
+``flash_attention``, ``cluster_attention``, ``ssd``,
+``paged_attention`` — resolves an
 *execution mode* at call (trace) time and then either runs the Pallas
 kernel or the pure-jnp oracle with identical semantics:
 
@@ -23,7 +24,8 @@ kernel or the pure-jnp oracle with identical semantics:
 Mode resolution, highest priority first:
 
 1. per-op environment override: ``REPRO_FORCE_PALLAS_FLASH`` /
-   ``REPRO_FORCE_PALLAS_CLUSTER`` / ``REPRO_FORCE_PALLAS_SSD``;
+   ``REPRO_FORCE_PALLAS_CLUSTER`` / ``REPRO_FORCE_PALLAS_SSD`` /
+   ``REPRO_FORCE_PALLAS_PAGED``;
 2. process-wide environment override: ``REPRO_FORCE_PALLAS``;
 3. per-op programmatic override: ``set_mode(mode, op)``;
 4. process-wide programmatic override: ``set_mode(mode)`` — this is what
@@ -89,13 +91,14 @@ from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
 
 MODES = ("auto", "ref", "interpret", "compiled")
-OPS = ("flash_attention", "cluster_attention", "ssd")
+OPS = ("flash_attention", "cluster_attention", "ssd", "paged_attention")
 
 _ENV_GLOBAL = "REPRO_FORCE_PALLAS"
 _ENV_PER_OP = {
     "flash_attention": "REPRO_FORCE_PALLAS_FLASH",
     "cluster_attention": "REPRO_FORCE_PALLAS_CLUSTER",
     "ssd": "REPRO_FORCE_PALLAS_SSD",
+    "paged_attention": "REPRO_FORCE_PALLAS_PAGED",
 }
 
 LANE = 128     # TPU lane width: the last dim of every VMEM tile
@@ -333,6 +336,31 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None,
     return unpad(_cab.cluster_attention_vjp(
         q, k, v, block_idx, buckets, bias_table, block_idx_t,
         causal=causal, interpret=interpret))
+
+
+# --------------------------------------------------------------- paged
+
+def paged_attention(q, k_pool, v_pool, block_tables, cache_len, *,
+                    q_offset=None, window=0, n_global=0):
+    """Paged-KV attention for the serving engine: every decode step and
+    chunked-prefill chunk reads the shared physical block pool through a
+    per-request block table (shape contract in
+    ``kernels/ref.paged_attention_ref``). ``window``/``n_global`` apply
+    the TorchGT cluster-sparse decode mask on this dispatch path.
+
+    The block-table gather has no Pallas kernel yet — ``ref`` serves
+    every resolved mode; ``interpret``/``compiled`` warn and fall back so
+    forcing Pallas process-wide (``REPRO_FORCE_PALLAS``) never silently
+    changes serving semantics."""
+    mode = resolve_mode("paged_attention")
+    if mode != "ref":
+        _fallback("paged_attention",
+                  _no_tpu(mode)
+                  or "the paged block-table gather has no Pallas kernel "
+                     "yet (ref is the only implementation)")
+    return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                    cache_len, q_offset=q_offset,
+                                    window=window, n_global=n_global)
 
 
 # --------------------------------------------------------------- ssd

@@ -3,6 +3,7 @@ match these to numerical tolerance across shape/dtype sweeps)."""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.dual_attention import cluster_sparse_attention
@@ -31,3 +32,53 @@ def cluster_attention_ref(q, k, v, block_idx, buckets=None, bias_table=None,
 
 def ssd_ref(x, dt, a, b, c, chunk):
     return ssd_chunked(x, dt, a, b, c, chunk)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, cache_len, *,
+                        q_offset=None, window=0, n_global=0):
+    """Attention over a paged (block) KV pool — the serving path's gather.
+
+    q            (B, Sq, H, Dh)   Sq == 1 for decode, a chunk for prefill
+    k/v_pool     (NB, page, KV, Dh) shared physical blocks (all requests)
+    block_tables (B, nmax) int32  logical block i of request b lives in
+                                  physical block ``block_tables[b, i]``
+    cache_len    (B,) int32       logical tokens live in request b's cache
+                                  (INCLUDING any tokens of q already
+                                  scattered into the pool by the caller)
+    q_offset     (B,) int32       logical position of q[:, 0]; None means
+                                  decode semantics (the single q row sits
+                                  at position ``cache_len - 1``)
+    window/n_global > 0 -> the TorchGT cluster-sparse decode mask (local
+    window + leading global sink tokens), same semantics per q position as
+    ``models.layers.decode_attention``.
+
+    Each request's logical positions 0..nmax*page-1 map onto pool rows via
+    its block table; rows at or past ``cache_len`` (and acausal rows) are
+    masked out, so physical-block reuse across requests never leaks.
+    """
+    B, Sq, H, Dh = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    G = H // KV
+    # (B, nmax, page, KV, Dh) -> (B, S, KV, Dh) with S = nmax * page
+    k = jnp.take(k_pool, block_tables, axis=0).reshape(B, -1, KV, Dh)
+    v = jnp.take(v_pool, block_tables, axis=0).reshape(B, -1, KV, Dh)
+    S = k.shape[1]
+    qg = q.reshape(B, Sq, KV, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    ln = jnp.asarray(cache_len, jnp.int32).reshape(B, 1, 1, 1, 1)
+    kpos = jnp.arange(S)[None, None, None, None, :]
+    if q_offset is None:
+        qpos = ln.reshape(B, 1, 1, 1) - 1 + jnp.zeros((Sq,), jnp.int32)
+    else:
+        qpos = (jnp.asarray(q_offset, jnp.int32).reshape(B, 1, 1, 1)
+                + jnp.arange(Sq, dtype=jnp.int32))
+    qpos = qpos[..., None]                       # (B, 1, 1, Sq, 1)
+    valid = (kpos < ln) & (kpos <= qpos)
+    if window:
+        valid = valid & ((kpos >= qpos + 1 - window) | (kpos < n_global))
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)

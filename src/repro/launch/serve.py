@@ -1,116 +1,92 @@
-"""Batched serving driver: fixed-slot continuous batching.
+"""Serving CLI over the repro.serve engines.
 
-A decode "engine" owns B cache slots; requests (prompt token lists) are
-admitted into free slots, prefilled token-by-token through the shared
-decode step (one jit program for the whole engine life — no recompiles),
-and generate until EOS/max_tokens, at which point the slot is recycled
-for the next queued request. This is the standard slot-based continuous
-batching loop (vLLM-style scheduling at its simplest) on top of the
-framework's decode path; the TorchGT cluster-sparse mask is a flag.
+Token LMs (dense/moe/vlm) go through :class:`repro.serve.ServeEngine`:
+chunked prefill + paged KV cache + continuous batching, exactly two
+traced programs for the engine's life (self-audited), optionally under
+the host mesh (``--mesh-model``) with the TorchGT cluster-sparse mask
+(``--sparse``).
+
+Graph-family archs go through :class:`repro.serve.GraphServe`: the CLI
+builds an SBM graph, answers node-classification and link-prediction
+queries through the same reformation pipeline the training tasks use,
+and reports the layout-cache behaviour.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b \
-      --requests 12 --batch 4 --max-tokens 24 [--sparse]
+      --requests 12 --batch 4 --chunk 16 --page 16 [--sparse] \
+      [--mesh-model 2]
+  PYTHONPATH=src python -m repro.launch.serve --arch graphormer_slim \
+      --graph-nodes 96 --queries 8
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from collections import deque
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import build
-from repro.nn import param as nnp
+from repro.serve import GraphServe, ServeEngine
 
 
-class DecodeEngine:
-    def __init__(self, model, params, *, batch_slots: int, max_len: int,
-                 sparse: bool = False, greedy: bool = True):
-        self.model = model
-        self.cfg = model.cfg
-        self.params = params
-        self.B = batch_slots
-        self.max_len = max_len
-        self.cache = nnp.init_tree(model.cache_defs(batch_slots, max_len),
-                                   jax.random.PRNGKey(0))
-        self._step = jax.jit(
-            lambda p, c, t, pos: model.decode(p, c, t, pos, sparse=sparse))
-        # per-slot host state
-        self.slot_req = [None] * batch_slots     # request id or None
-        self.slot_pos = np.zeros(batch_slots, np.int32)
-        self.slot_prompt = [None] * batch_slots  # remaining prompt tokens
-        self.slot_out = [[] for _ in range(batch_slots)]
-        self.queue: deque = deque()
-        self.done: dict = {}
-        self.steps = 0
+def serve_lm(model, args) -> int:
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=args.batch,
+                      page=args.page, max_len=args.max_len,
+                      chunk=args.chunk, sparse=args.sparse,
+                      mesh_model=args.mesh_model)
+    rng = np.random.default_rng(0)
+    cfg = model.cfg
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, args.prompt_len + 1))
+        eng.submit(rid, rng.integers(1, cfg.vocab_size // 8, plen).tolist(),
+                   args.max_tokens,
+                   arrival=rid * args.arrival_gap)
+    stats = eng.run()
+    lat = sorted(r["latency_s"] for r in eng.request_stats)
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+    print(f"served {stats['requests']} requests / {stats['tokens']} tokens "
+          f"in {stats['seconds']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
+          f"{stats['prefill_calls']} prefill + {stats['decode_calls']} "
+          f"decode calls, {stats['traced_programs']} traced programs, "
+          f"{args.batch} slots, page={args.page}, sparse={args.sparse})")
+    print(f"latency p50={p50 * 1e3:.1f}ms p99={p99 * 1e3:.1f}ms "
+          f"(free blocks at drain: {eng.allocator.n_free}/"
+          f"{eng.allocator.num_blocks - 1})")
+    for rid in sorted(eng.done)[:3]:
+        print(f"  req {rid}: {eng.done[rid][:10]}")
+    return 0
 
-    # -------------------------------------------------------- scheduling
 
-    def submit(self, req_id, prompt_tokens, max_tokens: int):
-        self.queue.append((req_id, list(prompt_tokens), max_tokens))
+def serve_graph(model, args) -> int:
+    from repro.core.graph import sbm_graph
 
-    def _admit(self):
-        for s in range(self.B):
-            if self.slot_req[s] is None and self.queue:
-                req_id, prompt, mt = self.queue.popleft()
-                self.slot_req[s] = (req_id, mt)
-                self.slot_prompt[s] = prompt
-                self.slot_pos[s] = 0
-                self.slot_out[s] = []
-
-    # -------------------------------------------------------- decode loop
-
-    def _next_tokens(self, last_logits):
-        """Pick the token each slot feeds next: prompt token while
-        prefilling, else greedy sample from the last logits."""
-        toks = np.zeros((self.B, 1), np.int32)
-        for s in range(self.B):
-            if self.slot_req[s] is None:
-                continue
-            if self.slot_prompt[s]:
-                toks[s, 0] = self.slot_prompt[s].pop(0)
-            else:
-                toks[s, 0] = int(
-                    np.argmax(last_logits[s, 0, :self.cfg.vocab_size]))
-                self.slot_out[s].append(int(toks[s, 0]))
-        return jnp.asarray(toks)
-
-    def run(self, *, eos: int = -1):
-        """Drive until queue + slots drain. NOTE: positions advance in
-        lock-step (single shared `pos` per step — cache rows for idle
-        slots receive padding writes, masked by their own position at
-        read time via per-slot cache_len in a full implementation; this
-        engine uses a shared clock, standard for fixed-slot batching)."""
-        last_logits = np.zeros((self.B, 1, self.cfg.vocab_padded),
-                               np.float32)
-        t0 = time.perf_counter()
-        while any(r is not None for r in self.slot_req) or self.queue:
-            self._admit()
-            toks = self._next_tokens(last_logits)
-            pos = jnp.int32(self.steps % self.max_len)
-            logits, self.cache = self._step(self.params, self.cache, toks,
-                                            pos)
-            last_logits = np.asarray(logits, np.float32)
-            self.steps += 1
-            # retire finished slots
-            for s in range(self.B):
-                if self.slot_req[s] is None:
-                    continue
-                req_id, mt = self.slot_req[s]
-                out = self.slot_out[s]
-                if len(out) >= mt or (out and out[-1] == eos) \
-                        or self.steps >= self.max_len - 1:
-                    self.done[req_id] = list(out)
-                    self.slot_req[s] = None
-        dt = time.perf_counter() - t0
-        total_tokens = sum(len(v) for v in self.done.values())
-        return {"requests": len(self.done), "tokens": total_tokens,
-                "seconds": dt, "tok_per_s": total_tokens / max(dt, 1e-9),
-                "engine_steps": self.steps}
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    g = sbm_graph(args.graph_nodes, args.graph_clusters, p_in=0.04,
+                  p_out=0.002, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    srv = GraphServe(model, params)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    nodes = rng.integers(0, g.n, args.queries)
+    out = srv.node(g, nodes)
+    # positive (real edge) vs random pairs through the link head
+    eidx = rng.integers(0, len(g.src), args.queries)
+    link_pos = srv.link(g, g.src[eidx], g.dst[eidx])
+    link_rnd = srv.link(g, rng.integers(0, g.n, args.queries),
+                        rng.integers(0, g.n, args.queries))
+    dt = time.perf_counter() - t0
+    print(f"GraphServe: {g.n}-node graph, {args.queries} node + "
+          f"{2 * args.queries} link queries in {dt:.2f}s "
+          f"({srv.n_cached_layouts()} cached layout)")
+    print(f"  node labels: {out['labels'][:8].tolist()}")
+    print(f"  link score (edges):  mean {link_pos['scores'].mean():+.3f}")
+    print(f"  link score (random): mean {link_rnd['scores'].mean():+.3f}")
+    return 0
 
 
 def main(argv=None):
@@ -118,39 +94,36 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen3_0_6b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
+    # token-LM engine knobs
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--page", type=int, default=16)
+    ap.add_argument("--arrival-gap", type=float, default=0.0,
+                    help="seconds between request arrivals (offered load)")
     ap.add_argument("--sparse", action="store_true")
+    ap.add_argument("--mesh-model", type=int, default=1)
+    # graph endpoint knobs
+    ap.add_argument("--graph-nodes", type=int, default=96)
+    ap.add_argument("--graph-clusters", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.family == "graph":
-        # graph transformers are encoders: model.decode is None, so the
-        # slot engine has nothing to drive — fail at the CLI boundary
-        # instead of a TypeError deep inside the decode loop
-        ap.error(f"--arch {args.arch}: graph-family archs have no "
-                 f"autoregressive decode path to serve; train them with "
-                 f"repro.launch.train (--task node|graph|link)")
     model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    eng = DecodeEngine(model, params, batch_slots=args.batch,
-                       max_len=args.max_len, sparse=args.sparse)
-    rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        plen = int(rng.integers(4, args.prompt_len + 1))
-        eng.submit(rid, rng.integers(1, cfg.vocab_size // 8, plen).tolist(),
-                   args.max_tokens)
-    stats = eng.run()
-    print(f"served {stats['requests']} requests / {stats['tokens']} tokens "
-          f"in {stats['seconds']:.2f}s ({stats['tok_per_s']:.1f} tok/s, "
-          f"{stats['engine_steps']} engine steps, "
-          f"{args.batch} slots, sparse={args.sparse})")
-    for rid in sorted(stats and eng.done)[:3]:
-        print(f"  req {rid}: {eng.done[rid][:10]}")
+    if cfg.family == "graph":
+        return serve_graph(model, args)
+    if model.paged_decode is None:
+        # recurrent/cross-attention decode state is not a positional KV
+        # cache — fail at the CLI boundary with the servable families
+        ap.error(f"--arch {args.arch} (family {cfg.family!r}) has no "
+                 f"paged serving path; servable: dense/moe/vlm token LMs "
+                 f"and graph archs (GraphServe)")
+    return serve_lm(model, args)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -101,6 +101,15 @@ class Model:
     prefill: Callable       # (params, batch) -> (logits, cache)
     decode: Callable        # (params, cache, tokens, pos) -> (logits, cache)
     cache_defs: Callable    # (batch, seq_len) -> defs
+    # paged serving entry points (repro/serve): None for families whose
+    # decode state is not a positional KV cache (ssm/hybrid recurrent
+    # states, encdec cross-attention) and for graph encoders (served via
+    # repro.serve.GraphServe instead).
+    prefill_chunk: Callable | None = None
+    # (params, pool, tokens(1,C), offset, length, block_tables) -> (logits, pool)
+    paged_decode: Callable | None = None
+    # (params, pool, tokens(B,1), pos(B,), block_tables) -> (logits, pool)
+    paged_cache_defs: Callable | None = None   # (num_blocks, page) -> defs
 
     @property
     def loss(self) -> Callable:
@@ -149,6 +158,14 @@ def build(cfg) -> Model:
             decode=lambda p, c, t, pos, sparse=False:
                 LM.lm_decode_step(p, cfg, c, t, pos, sparse=sparse),
             cache_defs=lambda b, s: LM.lm_cache_defs(cfg, b, s),
+            prefill_chunk=lambda p, pool, t, off, ln, bt, sparse=False:
+                LM.lm_prefill_chunk(p, cfg, pool, t, off, ln, bt,
+                                    sparse=sparse),
+            paged_decode=lambda p, pool, t, pos, bt, sparse=False:
+                LM.lm_paged_decode_step(p, cfg, pool, t, pos, bt,
+                                        sparse=sparse),
+            paged_cache_defs=lambda nb, page:
+                LM.lm_paged_cache_defs(cfg, nb, page),
         )
     if fam == "hybrid":
         return Model(

@@ -320,3 +320,171 @@ def lm_prefill(p, cfg, batch):
     h, _, caches = lm_forward(p, cfg, batch, return_kv=True)
     logits = L.logits_fn(p["embed"], cfg, h[:, -1:])
     return logits, caches
+
+
+# ------------------------------------------------------------ paged serving
+
+def lm_paged_cache_defs(cfg, num_blocks: int, page: int):
+    """Paged KV pool for the serving engine: ``num_blocks`` physical blocks
+    of ``page`` token rows, shared by every request; per-request block
+    tables map logical positions onto them (repro/serve). Physical block 0
+    is the engine's scratch sink for idle decode slots and chunk padding —
+    the allocator never hands it to a request."""
+    KV, Dh = cfg.kv_heads, cfg.head_dim
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    one = {
+        "k": nnp.zeros((num_blocks, page, KV, Dh),
+                       (None, None, "kv_heads", "head_dim"),
+                       dtype=jnp.bfloat16),
+        "v": nnp.zeros((num_blocks, page, KV, Dh),
+                       (None, None, "kv_heads", "head_dim"),
+                       dtype=jnp.bfloat16),
+    }
+    defs = {"layers": nnp.stack(one, n_scan)}
+    for i in range(cfg.n_dense_layers):
+        defs[f"dense_layer_{i}"] = dict(one)
+    return defs
+
+
+def _pool_scatter(cc, k_rows, v_rows, flat):
+    """Scatter per-token k/v rows ((N, KV, Dh)) into one layer's pool at
+    flat token indices ``flat`` ((N,) int32, = block * page + slot)."""
+    NB, page, KV, Dh = cc["k"].shape
+    kf = cc["k"].reshape(NB * page, KV, Dh) \
+        .at[flat].set(k_rows.astype(cc["k"].dtype))
+    vf = cc["v"].reshape(NB * page, KV, Dh) \
+        .at[flat].set(v_rows.astype(cc["v"].dtype))
+    return {"k": kf.reshape(NB, page, KV, Dh),
+            "v": vf.reshape(NB, page, KV, Dh)}
+
+
+def _layer_paged_decode(p, cfg, h, cc, pos, block_tables, moe: bool,
+                        window=0, n_global=0):
+    """One layer of batched paged decode: h (B,1,D), per-slot positions
+    ``pos`` (B,). Writes each slot's new k/v row through its block table,
+    then attends over the pool via the kernel dispatch layer."""
+    from repro.kernels import ops as kops  # lazy: kops imports model layers
+
+    page = cc["k"].shape[1]
+    a = L.rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+    q, k_new, v_new = L.project_qkv(p["attn"], cfg, a,
+                                    jnp.reshape(pos, (-1, 1)))
+    blk = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                              axis=1)[:, 0]
+    flat = blk * page + pos % page
+    cc = _pool_scatter(cc, k_new[:, 0], v_new[:, 0], flat)
+    o = kops.paged_attention(q, cc["k"], cc["v"], block_tables, pos + 1,
+                             window=window, n_global=n_global)
+    h = h + L.out_proj(p["attn"], o)
+    m = L.rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+    y = moe_apply(p["moe"], cfg, m)[0] if moe else L.mlp(p["mlp"], m)
+    return h + y, cc
+
+
+def lm_paged_decode_step(p, cfg, pool, tokens, pos, block_tables, *,
+                         sparse: bool = False):
+    """One serving decode step over the paged pool. tokens (B,1) int32;
+    pos (B,) int32 per-slot cache lengths (slot b's new token is written
+    at logical position pos[b] — no shared engine clock); block_tables
+    (B, nmax) int32. Returns (logits (B,1,V), new_pool). Shapes are
+    independent of every request's length, so the engine traces this
+    exactly once."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = L.embed_tokens(p["embed"], cfg, tokens, dtype)
+    is_moe = bool(cfg.moe_experts)
+    window = cfg.window if sparse else 0
+    n_global = cfg.n_global if sparse else 0
+
+    new_pool = {}
+    for i in range(cfg.n_dense_layers):
+        key = f"dense_layer_{i}"
+        h, new_pool[key] = _layer_paged_decode(
+            p[key], cfg, h, pool[key], pos, block_tables, moe=False,
+            window=window, n_global=n_global)
+
+    def scan_body(h, xs):
+        pp, cc = xs
+        h, cc = _layer_paged_decode(pp, cfg, h, cc, pos, block_tables,
+                                    moe=is_moe, window=window,
+                                    n_global=n_global)
+        return h, cc
+
+    h, scanned = jax.lax.scan(scan_body, h, (p["layers"], pool["layers"]))
+    new_pool["layers"] = scanned
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    return L.logits_fn(p["embed"], cfg, h), new_pool
+
+
+def _layer_prefill_chunk(p, cfg, h, cc, tpos, flat, block_tables,
+                         cache_len, q_offset, moe: bool, window=0,
+                         n_global=0):
+    """One layer of single-request chunked prefill: h (1,C,D); the chunk's
+    k/v rows land in the pool first, then the chunk attends over the full
+    logical cache (earlier chunks included) with a causal + optional
+    TorchGT window/global mask per q position."""
+    from repro.kernels import ops as kops  # lazy: kops imports model layers
+
+    a = L.rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+    q, k_new, v_new = L.project_qkv(p["attn"], cfg, a, tpos[None])
+    cc = _pool_scatter(cc, k_new[0], v_new[0], flat)
+    o = kops.paged_attention(q, cc["k"], cc["v"], block_tables, cache_len,
+                             q_offset=q_offset, window=window,
+                             n_global=n_global)
+    h = h + L.out_proj(p["attn"], o)
+    m = L.rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+    y = moe_apply(p["moe"], cfg, m)[0] if moe else L.mlp(p["mlp"], m)
+    return h + y, cc
+
+
+def lm_prefill_chunk(p, cfg, pool, tokens, offset, length, block_tables, *,
+                     sparse: bool = False):
+    """One fixed-size chunk of a single prompt (B == 1) through the full
+    forward, writing its KV into the paged pool.
+
+    tokens (1, C) int32 — the chunk, arbitrary-padded past ``length``;
+    offset () int32 — logical position of tokens[0, 0] (0 for the first
+    chunk of a prompt); length () int32 in [1, C] — valid tokens in this
+    chunk; block_tables (1, nmax) int32. Returns (logits (1, 1, V) at the
+    chunk's last valid position, new_pool). C and nmax are engine
+    constants, so every chunk of every prompt reuses one traced program.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    C = tokens.shape[1]
+    page = jax.tree_util.tree_leaves(pool)[0].shape[-3]
+    offset = jnp.asarray(offset, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    idx = jnp.arange(C, dtype=jnp.int32)
+    tpos = offset + idx                       # (C,) logical positions
+    nmax = block_tables.shape[1]
+    blk = jnp.take(block_tables[0], jnp.minimum(tpos // page, nmax - 1))
+    # padding rows park their garbage k/v in scratch block 0, row 0
+    flat = jnp.where(idx < length, blk * page + tpos % page, 0)
+    cache_len = jnp.reshape(offset + length, (1,))
+    q_offset = jnp.reshape(offset, (1,))
+    window = cfg.window if sparse else 0
+    n_global = cfg.n_global if sparse else 0
+    is_moe = bool(cfg.moe_experts)
+
+    h = L.embed_tokens(p["embed"], cfg, tokens, dtype)
+    new_pool = {}
+    for i in range(cfg.n_dense_layers):
+        key = f"dense_layer_{i}"
+        h, new_pool[key] = _layer_prefill_chunk(
+            p[key], cfg, h, pool[key], tpos, flat, block_tables,
+            cache_len, q_offset, moe=False, window=window,
+            n_global=n_global)
+
+    def scan_body(h, xs):
+        pp, cc = xs
+        h, cc = _layer_prefill_chunk(pp, cfg, h, cc, tpos, flat,
+                                     block_tables, cache_len, q_offset,
+                                     moe=is_moe, window=window,
+                                     n_global=n_global)
+        return h, cc
+
+    h, scanned = jax.lax.scan(scan_body, h, (p["layers"], pool["layers"]))
+    new_pool["layers"] = scanned
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(h, jnp.maximum(length - 1, 0), 1,
+                                        axis=1)
+    return L.logits_fn(p["embed"], cfg, last), new_pool

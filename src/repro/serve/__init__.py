@@ -1,0 +1,12 @@
+"""Serving subsystem: paged-KV continuous batching for token LMs
+(:class:`ServeEngine`) and reformation-cached node/link queries for
+graph transformers (:class:`GraphServe`).
+
+``python -m repro.launch.serve`` is the CLI over both.
+"""
+
+from repro.serve.engine import ServeEngine
+from repro.serve.graph_serve import GraphServe, graph_hash
+from repro.serve.paged import BlockAllocator
+
+__all__ = ["ServeEngine", "GraphServe", "BlockAllocator", "graph_hash"]

@@ -1,0 +1,338 @@
+"""Serving engine: chunked prefill + paged KV cache + continuous batching.
+
+The engine owns ``batch_slots`` decode rows and one shared physical block
+pool (``models/lm.lm_paged_cache_defs``). A request's life:
+
+1. **admit** — reserve ``ceil((prompt + max_tokens) / page)`` physical
+   blocks through the :class:`~repro.serve.paged.BlockAllocator` (the
+   whole budget up front, so generation can never run out of cache) and
+   take a free slot;
+2. **chunked prefill** — the prompt runs ``chunk`` tokens at a time
+   through ONE jitted program (``model.prefill_chunk``), each chunk
+   writing its KV rows into the pool through the slot's block table;
+3. **decode** — all in-flight slots advance together through the second
+   jitted program (``model.paged_decode``), each slot at its OWN
+   position (no shared engine clock): slot b writes position ``pos[b]``
+   and attends its logical cache ``0..pos[b]``;
+4. **retire** — blocks go back to the free list, the slot is recycled.
+
+Long and short requests coexist without per-slot ``max_len`` padding:
+``max_len`` only caps a request's logical budget (it sizes the block
+*table*, not the cache). Exactly two programs are traced for the
+engine's life — audited on every ``run()`` via
+``analysis.trace_audit.assert_max_traces``. With ``mesh_model > 1`` both
+programs run under the host mesh with the decode sharding recipe, and
+``sparse=True`` applies the TorchGT cluster-sparse (window + global
+sink) mask on the ``kernels/ops`` dispatch path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import numpy as np
+
+from repro import compat
+from repro.analysis.trace_audit import assert_max_traces
+from repro.nn import param as nnp
+from repro.parallel import axes as pax
+from repro.serve.paged import BlockAllocator
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: object
+    prompt: list
+    max_tokens: int
+    arrival: float           # seconds after run() starts (offered load)
+    t_submit: float = 0.0
+    t_admit: float = -1.0
+    t_first: float = -1.0    # first generated token (TTFT)
+    t_done: float = -1.0
+    blocks: list = dataclasses.field(default_factory=list)
+    filled: int = 0          # prompt tokens already prefilled
+    cache_len: int = 0       # tokens written into the pool (per-slot pos)
+    pending: int = -1        # sampled token not yet fed back
+    out: list = dataclasses.field(default_factory=list)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.filled < len(self.prompt)
+
+
+class ServeEngine:
+    """Continuous-batching engine over the paged-KV serving path.
+
+    Serves every family with a paged decode path (dense / moe / vlm
+    token LMs); graph archs are served by
+    :class:`repro.serve.graph_serve.GraphServe` instead.
+    """
+
+    def __init__(self, model, params, *, batch_slots: int = 4,
+                 page: int = 16, max_len: int = 256, chunk: int = 32,
+                 num_blocks: int | None = None, sparse: bool = False,
+                 mesh_model: int = 1, eos: int | None = None):
+        if model.paged_decode is None or model.prefill_chunk is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged serving path "
+                f"(servable: dense/moe/vlm token LMs; graph archs go "
+                f"through GraphServe)")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.B = int(batch_slots)
+        self.page = int(page)
+        self.max_len = int(max_len)
+        self.chunk = int(chunk)
+        self.sparse = bool(sparse)
+        self.eos = eos
+        self.nmax = -(-self.max_len // self.page)  # block-table width
+        if num_blocks is None:
+            # enough for every slot at full budget, + the scratch block
+            num_blocks = self.B * self.nmax + 1
+        self.allocator = BlockAllocator(num_blocks, self.page)
+        pool_defs = model.paged_cache_defs(num_blocks, self.page)
+        self.pool = nnp.init_tree(pool_defs, jax.random.PRNGKey(0))
+
+        self.mesh = self.recipe = self._pool_shardings = None
+        if mesh_model > 1:
+            from jax.sharding import NamedSharding
+
+            from repro.configs.base import ShapeConfig
+            from repro.launch.mesh import make_host_mesh
+            from repro.parallel.sharding import recipe_for
+            self.mesh = make_host_mesh(model=mesh_model)
+            self.recipe = recipe_for(
+                ShapeConfig("serve", "decode", self.max_len, self.B),
+                self.mesh)
+            # pin the pool's sharding for the engine's life: place it
+            # once per the recipe and constrain the programs' output
+            # pool to the same placement — otherwise the donated pool
+            # round-trips with a NEW sharding after the first call and
+            # the second call retraces (breaking the 2-program budget)
+            from jax.sharding import PartitionSpec
+
+            def _norm(spec):
+                # match jax's normalized output specs (trailing Nones
+                # dropped) or the round-tripped pool keys a SECOND
+                # executable for the same program
+                entries = list(spec)
+                while entries and entries[-1] is None:
+                    entries.pop()
+                return NamedSharding(self.mesh, PartitionSpec(*entries))
+
+            self._pool_shardings = jax.tree_util.tree_map(
+                _norm, nnp.spec_tree(pool_defs, dict(self.recipe.params),
+                                     self.mesh))
+            self.pool = jax.tree_util.tree_map(
+                jax.device_put, self.pool, self._pool_shardings)
+
+        def _with_rules(fn):
+            def run(*args):
+                if self.recipe is None:
+                    return fn(*args)
+                with pax.axis_rules(self.recipe, self.mesh):
+                    logits, pool = fn(*args)
+                pool = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, pool,
+                    self._pool_shardings)
+                return logits, pool
+            return run
+
+        sp = self.sparse
+        self._prefill = jax.jit(_with_rules(
+            lambda p, pool, t, off, ln, bt:
+                model.prefill_chunk(p, pool, t, off, ln, bt, sparse=sp)),
+            donate_argnums=(1,))
+        self._decode = jax.jit(_with_rules(
+            lambda p, pool, t, pos, bt:
+                model.paged_decode(p, pool, t, pos, bt, sparse=sp)),
+            donate_argnums=(1,))
+        self._programs = {"prefill": self._prefill, "decode": self._decode}
+
+        # host scheduling state
+        self._queue: deque[_Request] = deque()
+        self._slots: list[_Request | None] = [None] * self.B
+        self._bt = np.zeros((self.B, self.nmax), np.int32)
+        self.done: dict = {}
+        self.request_stats: list[dict] = []
+        self.prefill_calls = 0
+        self.decode_calls = 0
+
+    # ------------------------------------------------------------ metrics
+
+    def traced_programs(self) -> int:
+        """Programs traced so far across the engine's two entry points."""
+        return sum(f._cache_size() for f in self._programs.values())
+
+    # ---------------------------------------------------------- admission
+
+    def submit(self, rid, prompt_tokens, max_tokens: int,
+               arrival: float = 0.0):
+        """Queue a request. ``arrival`` (seconds after ``run()`` starts)
+        models offered load — the scheduler will not admit the request
+        before its arrival time."""
+        prompt = [int(t) for t in prompt_tokens]
+        if not prompt:
+            raise ValueError(f"request {rid!r}: empty prompt")
+        if max_tokens < 1:
+            raise ValueError(f"request {rid!r}: max_tokens must be >= 1")
+        budget = len(prompt) + int(max_tokens)
+        if budget > self.max_len:
+            raise ValueError(
+                f"request {rid!r}: prompt {len(prompt)} + max_tokens "
+                f"{max_tokens} exceeds max_len {self.max_len}")
+        need = self.allocator.blocks_for(budget)
+        if need > self.allocator.num_blocks - 1:
+            raise ValueError(
+                f"request {rid!r}: needs {need} blocks, pool has "
+                f"{self.allocator.num_blocks - 1} usable")
+        self._queue.append(_Request(rid, prompt, int(max_tokens),
+                                    float(arrival),
+                                    t_submit=float(arrival)))
+
+    def _admit(self, now: float):
+        """FIFO admission: the queue head is admitted once it has
+        arrived, a slot is free, and its whole block budget fits."""
+        for s in range(self.B):
+            if not self._queue or self._slots[s] is not None:
+                continue
+            req = self._queue[0]
+            if req.arrival > now:
+                break
+            need = self.allocator.blocks_for(
+                len(req.prompt) + req.max_tokens)
+            if not self.allocator.can_alloc(need):
+                break  # head-of-line waits for retirements (FIFO, no
+                       # starvation; its reservation always fits the pool)
+            self._queue.popleft()
+            req.blocks = self.allocator.alloc(need)
+            req.t_admit = now
+            self._slots[s] = req
+            self._bt[s] = 0
+            self._bt[s, :len(req.blocks)] = req.blocks
+
+    # ------------------------------------------------------------- phases
+
+    def _sample(self, logits_row) -> int:
+        return int(np.argmax(logits_row[:self.cfg.vocab_size]))
+
+    def _retire(self, s: int, now: float):
+        req = self._slots[s]
+        req.t_done = now
+        self.done[req.rid] = list(req.out)
+        self.request_stats.append({
+            "rid": req.rid, "prompt_len": len(req.prompt),
+            "new_tokens": len(req.out), "t_submit": req.t_submit,
+            "t_admit": req.t_admit, "t_first": req.t_first,
+            "t_done": now, "latency_s": now - req.t_submit,
+            "ttft_s": req.t_first - req.t_submit,
+        })
+        self.allocator.free(req.blocks)
+        self._slots[s] = None
+        self._bt[s] = 0
+
+    def _finished(self, req: _Request) -> bool:
+        return len(req.out) >= req.max_tokens or (
+            self.eos is not None and req.out and req.out[-1] == self.eos)
+
+    def _prefill_step(self, now: float) -> bool:
+        """One prompt chunk for every slot still prefilling. A slot whose
+        prompt completes samples its first token from the chunk logits."""
+        ran = False
+        for s in range(self.B):
+            req = self._slots[s]
+            if req is None or not req.prefilling:
+                continue
+            ran = True
+            n = min(self.chunk, len(req.prompt) - req.filled)
+            tokens = np.zeros((1, self.chunk), np.int32)
+            tokens[0, :n] = req.prompt[req.filled:req.filled + n]
+            logits, self.pool = self._prefill(
+                self.params, self.pool, tokens, np.int32(req.filled),
+                np.int32(n), self._bt[s:s + 1])
+            self.prefill_calls += 1
+            req.filled += n
+            req.cache_len = req.filled
+            if not req.prefilling:
+                tok = self._sample(np.asarray(logits[0, 0], np.float32))
+                req.t_first = time.perf_counter() - self._t0
+                req.out.append(tok)
+                req.pending = tok
+                if self._finished(req):
+                    self._retire(s, time.perf_counter() - self._t0)
+        return ran
+
+    def _decode_step(self) -> bool:
+        """One batched decode step for every slot holding a pending
+        token. Idle and still-prefilling rows run as scratch no-ops:
+        token 0 at position 0 through an all-zeros block table, so their
+        writes land in the reserved scratch block."""
+        active = [s for s in range(self.B)
+                  if self._slots[s] is not None
+                  and not self._slots[s].prefilling]
+        if not active:
+            return False
+        tokens = np.zeros((self.B, 1), np.int32)
+        pos = np.zeros(self.B, np.int32)
+        bt = np.zeros_like(self._bt)
+        for s in active:
+            req = self._slots[s]
+            tokens[s, 0] = req.pending
+            pos[s] = req.cache_len
+            bt[s] = self._bt[s]
+        logits, self.pool = self._decode(self.params, self.pool, tokens,
+                                         pos, bt)
+        self.decode_calls += 1
+        arr = np.asarray(logits[:, 0], np.float32)
+        now = time.perf_counter() - self._t0
+        for s in active:
+            req = self._slots[s]
+            req.cache_len += 1
+            tok = self._sample(arr[s])
+            req.out.append(tok)
+            req.pending = tok
+            if self._finished(req):
+                self._retire(s, now)
+        return True
+
+    # ---------------------------------------------------------- main loop
+
+    def run(self) -> dict:
+        """Drive until the queue and all slots drain. Re-audits the
+        two-traced-programs invariant on every call (the budget covers
+        NEW traces, so a warm engine must add zero)."""
+        self._t0 = time.perf_counter()
+        budget = 2 if self.traced_programs() == 0 else 0
+        mesh_ctx = (compat.use_mesh(self.mesh) if self.mesh is not None
+                    else contextlib.nullcontext())
+        with assert_max_traces(self._programs, budget,
+                               label="serve engine (prefill + decode)"):
+            with mesh_ctx:
+                self._run_loop()
+        dt = time.perf_counter() - self._t0
+        total = sum(len(v) for v in self.done.values())
+        return {
+            "requests": len(self.done), "tokens": total, "seconds": dt,
+            "tok_per_s": total / max(dt, 1e-9),
+            "prefill_calls": self.prefill_calls,
+            "decode_calls": self.decode_calls,
+            "traced_programs": self.traced_programs(),
+        }
+
+    def _run_loop(self):
+        while self._queue or any(r is not None for r in self._slots):
+            now = time.perf_counter() - self._t0
+            self._admit(now)
+            ran = self._prefill_step(now)
+            ran = self._decode_step() or ran
+            if not ran and self._queue:
+                # nothing in flight: sleep until the next arrival
+                wait = self._queue[0].arrival - (
+                    time.perf_counter() - self._t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))

@@ -1,0 +1,122 @@
+"""GraphServe: node- and link-prediction serving over the Task API.
+
+Graph transformers have no autoregressive decode — a "request" is a
+query against an encoded graph. GraphServe is the serving half of that
+contract: it runs the SAME reformation pipeline the training tasks use
+(``data/graph_pipeline.prepare_node_task`` — cluster reorder, global
+tokens, sparse layout) and the same heads (``tasks/node`` argmax logits,
+``tasks/link`` scaled dot-product edge scores), but caches the prepared
+layout per *graph hash* so repeated queries against one graph pay the
+reformation cost once.
+
+Two endpoints:
+
+* ``node(g, nodes)``   — class logits / argmax labels for node ids;
+* ``link(g, src, dst)`` — symmetric dot-product scores for node pairs
+  (the ``tasks/link.link_loss`` scoring rule, so a head trained by
+  LinkTask serves with identical semantics).
+
+Node ids are ORIGINAL graph ids; the mapping onto cluster-reordered
+sequence positions (``inv_perm[node] + n_global``) is internal, exactly
+mirroring ``LinkTask``'s edge-endpoint mapping.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+from repro.core.graph_model import graph_forward, graph_predict
+from repro.data.graph_pipeline import prepare_node_task
+
+
+def graph_hash(g) -> str:
+    """Content hash of a graph (topology + features + labels) — the
+    layout-cache key, so a mutated graph re-forms instead of aliasing a
+    stale layout."""
+    h = hashlib.sha256()
+    h.update(np.int64(g.n).tobytes())
+    h.update(np.ascontiguousarray(g.src, np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.dst, np.int64).tobytes())
+    for arr in (g.feat, g.labels):
+        h.update(b"|")
+        if arr is not None:
+            h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+class GraphServe:
+    """Serves node/link queries for a graph-family model."""
+
+    def __init__(self, model, params, *, bq: int = 32, bk: int = 32,
+                 d_b: int = 8, seed: int = 0):
+        if model.cfg.family != "graph":
+            raise ValueError(
+                f"GraphServe serves the graph family, got "
+                f"{model.cfg.family!r} (token LMs go through ServeEngine)")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.bq, self.bk, self.d_b, self.seed = bq, bk, d_b, seed
+        self._layouts: dict[str, tuple] = {}   # hash -> (prep, inv_perm)
+        cfg = self.cfg
+        # one jitted program per endpoint; the layout cache keeps batch
+        # shapes stable per graph, so repeat queries never retrace
+        self._logits = jax.jit(
+            lambda p, b: graph_predict(p, cfg, b, dense=False))
+        self._hidden = jax.jit(
+            lambda p, b: graph_forward(p, cfg, b, dense=False))
+
+    # ------------------------------------------------------------- layout
+
+    def _prepared(self, g):
+        key = graph_hash(g)
+        hit = self._layouts.get(key)
+        if hit is None:
+            prep = prepare_node_task(g, self.cfg, bq=self.bq, bk=self.bk,
+                                     d_b=self.d_b, seed=self.seed)
+            inv = np.empty(g.n, np.int64)
+            inv[prep.perm] = np.arange(g.n)
+            hit = self._layouts[key] = (prep, inv)
+        return hit
+
+    def n_cached_layouts(self) -> int:
+        return len(self._layouts)
+
+    def _positions(self, g, nodes, inv) -> np.ndarray:
+        nodes = np.asarray(nodes, np.int64)
+        if nodes.size and (nodes.min() < 0 or nodes.max() >= g.n):
+            raise ValueError(
+                f"node ids must be in [0, {g.n}), got "
+                f"[{nodes.min()}, {nodes.max()}]")
+        return inv[nodes] + self.cfg.n_global
+
+    # ---------------------------------------------------------- endpoints
+
+    def node(self, g, nodes) -> dict:
+        """Class logits + argmax labels for original node ids."""
+        prep, inv = self._prepared(g)
+        pos = self._positions(g, nodes, inv)
+        logits = np.asarray(self._logits(self.params, prep.batch)[0],
+                            np.float32)
+        sel = logits[pos]
+        return {"nodes": np.asarray(nodes, np.int64),
+                "logits": sel,
+                "labels": np.argmax(sel, axis=-1).astype(np.int64)}
+
+    def link(self, g, src, dst) -> dict:
+        """Scaled dot-product scores for node pairs — the
+        ``tasks/link.link_loss`` rule: ``(h_u . h_v) / sqrt(D)``,
+        probability via sigmoid."""
+        prep, inv = self._prepared(g)
+        ps = self._positions(g, src, inv)
+        pd = self._positions(g, dst, inv)
+        h = np.asarray(self._hidden(self.params, prep.batch)[0],
+                       np.float32)
+        scores = (h[ps] * h[pd]).sum(-1) / np.sqrt(h.shape[-1])
+        return {"src": np.asarray(src, np.int64),
+                "dst": np.asarray(dst, np.int64),
+                "scores": scores,
+                "prob": 1.0 / (1.0 + np.exp(-scores))}

@@ -135,6 +135,48 @@ def test_architecture_documents_every_lint_rule():
         assert name in arch and hasattr(trace_audit, name)
 
 
+def test_readme_documents_serving_surface():
+    """The serving engine is public surface: every CLI knob
+    launch/serve.py exposes must be in the README, along with both
+    engine entry points and the paged-attention dispatch env var."""
+    serve_src = (ROOT / "src" / "repro" / "launch" / "serve.py").read_text()
+    readme = (ROOT / "README.md").read_text()
+    for flag in ("--batch", "--page", "--chunk", "--max-len",
+                 "--arrival-gap", "--sparse", "--mesh-model"):
+        assert flag in serve_src, f"launch/serve.py lost {flag}"
+        assert flag in readme, f"README.md does not document {flag}"
+    for name in ("ServeEngine", "GraphServe", "BlockAllocator",
+                 "BENCH_serve.json"):
+        assert name in readme, f"README.md does not mention {name}"
+    import repro.kernels.ops as kops
+    assert "paged_attention" in kops.OPS, \
+        "kernels/ops.py lost the paged_attention op"
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "## The serving engine" in arch
+    for term in ("BlockAllocator", "lm_prefill_chunk",
+                 "lm_paged_decode_step", "graph_hash",
+                 "assert_max_traces"):
+        assert term in arch, f"architecture.md lost serving term {term!r}"
+
+
+def test_benchmarks_doc_documents_serve_schema():
+    """docs/benchmarks.md must document BENCH_serve.json and every key
+    of the schema benchmarks/serving.py actually emits."""
+    src = (ROOT / "benchmarks" / "serving.py").read_text()
+    m = re.search(r"SERVE_SCHEMA = \(([^)]*)\)", src)
+    assert m, "benchmarks/serving.py lost its SERVE_SCHEMA tuple"
+    keys = re.findall(r'"(\w+)"', m.group(1))
+    assert keys, "SERVE_SCHEMA is empty?"
+    doc = (ROOT / "docs" / "benchmarks.md").read_text()
+    assert "BENCH_serve.json" in doc, \
+        "docs/benchmarks.md missing BENCH_serve.json"
+    assert "BENCH_serve.json" in src, \
+        "benchmarks/serving.py no longer writes BENCH_serve.json"
+    missing = [k for k in keys if f"`{k}`" not in doc]
+    assert not missing, (
+        f"docs/benchmarks.md missing serve schema keys: {missing}")
+
+
 def test_benchmarks_doc_documents_bench_json_schema():
     """docs/benchmarks.md must document both BENCH json artifacts and
     every key of the schema benchmarks/run.py actually emits."""

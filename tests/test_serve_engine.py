@@ -1,44 +1,269 @@
-"""Continuous-batching decode engine: slot recycling, completion, and
-determinism (same requests -> same generations)."""
+"""Serving engine battery: paged-KV continuous batching (slot recycling,
+per-slot positions, block accounting), the BlockAllocator safety
+properties, GraphServe endpoints, and the CLI routing.
+
+The two regression tests pin the shared-clock bugs of the old
+fixed-slot engine: (1) a single engine-wide ``pos = steps % max_len``
+wrapped every cache once the ENGINE (not the request) had run max_len
+steps, silently overwriting live KV rows; (2) the retirement rule
+``steps >= max_len - 1`` killed late-admitted requests short as soon as
+the shared clock ran out, however young the request. Both are
+impossible with per-slot positions — and these tests fail against the
+old engine semantics.
+"""
 
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.launch.serve import DecodeEngine
 from repro.launch.serve import main as serve_main
 from repro.models import build
+from repro.serve import BlockAllocator, GraphServe, ServeEngine, graph_hash
+
+from _hypothesis_compat import given, settings, st
 
 
-def _run(seed=0):
+@pytest.fixture(scope="module")
+def lm():
     cfg = get_smoke_config("qwen3_0_6b")
     model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    eng = DecodeEngine(model, params, batch_slots=3, max_len=128)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(lm, **kw):
+    model, params = lm
+    kw.setdefault("batch_slots", 3)
+    kw.setdefault("page", 8)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk", 8)
+    return ServeEngine(model, params, **kw)
+
+
+def _prompts(n, seed=0, lo=4, hi=12):
     rng = np.random.default_rng(seed)
-    for rid in range(7):
-        eng.submit(rid, rng.integers(1, 64, 6).tolist(), 5)
+    return [rng.integers(1, 64, rng.integers(lo, hi + 1)).tolist()
+            for _ in range(n)]
+
+
+# --------------------------------------------------------------- engine
+
+def test_engine_serves_more_requests_than_slots(lm):
+    eng = _engine(lm)
+    for rid, p in enumerate(_prompts(7)):
+        eng.submit(rid, p, 5)
     stats = eng.run()
-    return eng, stats
-
-
-def test_engine_serves_more_requests_than_slots():
-    eng, stats = _run()
     assert stats["requests"] == 7           # 7 requests through 3 slots
     assert all(len(v) == 5 for v in eng.done.values())
     assert stats["tokens"] == 35
+    assert stats["traced_programs"] == 2    # one prefill + one decode
 
 
-def test_engine_deterministic():
-    e1, _ = _run(seed=1)
-    e2, _ = _run(seed=1)
-    assert e1.done == e2.done
+def test_engine_deterministic(lm):
+    outs = []
+    for _ in range(2):
+        eng = _engine(lm)
+        for rid, p in enumerate(_prompts(5, seed=1)):
+            eng.submit(rid, p, 4)
+        eng.run()
+        outs.append(eng.done)
+    assert outs[0] == outs[1]
 
 
-def test_serve_rejects_graph_archs(capsys):
-    """Graph archs have no decode path: the CLI must exit with a clear
-    message instead of crashing with a TypeError deep in the engine."""
+def test_engine_frees_every_block(lm):
+    eng = _engine(lm, batch_slots=2)
+    for rid, p in enumerate(_prompts(6, seed=2)):
+        eng.submit(rid, p, 6)
+    eng.run()
+    assert eng.allocator.n_live == 0
+    assert eng.allocator.n_free == eng.allocator.num_blocks - 1
+
+
+def test_engine_rejects_over_budget_and_empty(lm):
+    eng = _engine(lm, max_len=32)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(0, [1] * 20, 20)         # 40 > 32
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(1, [], 4)
+
+
+def test_engine_requires_paged_path():
+    cfg = get_smoke_config("mamba2_2_7b")   # ssm: recurrent decode state
+    model = build(cfg)
+    with pytest.raises(ValueError, match="no paged serving path"):
+        ServeEngine(model, model.init(jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------- shared-clock regressions
+
+def test_late_request_matches_solo_run(lm):
+    """Regression (shared-clock cache wrap): with one slot and two
+    back-to-back requests the engine's TOTAL decode steps exceed
+    max_len, which wrapped the old engine's shared ``steps % max_len``
+    position and overwrote the live cache. Per-slot positions: the
+    late request must generate exactly what it generates alone."""
+    prompt = _prompts(1, seed=3, lo=5, hi=6)[0]
+    solo = _engine(lm, batch_slots=1, max_len=32)
+    solo.submit("solo", prompt, 24)
+    solo.run()
+
+    eng = _engine(lm, batch_slots=1, max_len=32)
+    eng.submit("first", _prompts(1, seed=4, lo=5, hi=6)[0], 24)
+    eng.submit("late", prompt, 24)
+    stats = eng.run()
+    assert stats["decode_calls"] > 32       # engine clock well past max_len
+    assert eng.done["late"] == solo.done["solo"]
+
+
+def test_late_request_not_retired_early(lm):
+    """Regression (shared-clock retirement): the old rule
+    ``engine_steps >= max_len - 1`` cut every late-admitted request
+    short. Every request must produce its full max_tokens, however
+    late it was admitted."""
+    eng = _engine(lm, batch_slots=2, max_len=32, page=8)
+    for rid, p in enumerate(_prompts(8, seed=5, lo=4, hi=8)):
+        eng.submit(rid, p, 20)
+    eng.run()
+    assert sorted(eng.done) == list(range(8))
+    assert {len(v) for v in eng.done.values()} == {20}
+
+
+# ------------------------------------------------------ block allocator
+
+@settings(max_examples=8)
+@given(num_blocks=st.integers(4, 40), page=st.integers(1, 16),
+       seed=st.integers(0, 10_000))
+def test_allocator_properties(num_blocks, page, seed):
+    """Random admit/free traffic: no aliasing across live allocations,
+    free+live conserved, scratch block never handed out, and full drain
+    restores the whole free list (no leaks)."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(num_blocks, page)
+    usable = num_blocks - 1
+    live: dict[int, list] = {}
+    for op in range(60):
+        if live and (rng.random() < 0.4 or alloc.n_free == 0):
+            rid = list(live)[int(rng.integers(len(live)))]
+            alloc.free(live.pop(rid))
+        else:
+            n = alloc.blocks_for(int(rng.integers(1, 4 * page + 1)))
+            if not alloc.can_alloc(n):
+                with pytest.raises(RuntimeError, match="exhausted"):
+                    alloc.alloc(n)
+                continue
+            blocks = alloc.alloc(n)
+            assert 0 not in blocks          # scratch is never allocated
+            live[op] = blocks
+        flat = [b for bs in live.values() for b in bs]
+        assert len(flat) == len(set(flat))  # no aliasing across live reqs
+        assert alloc.n_free + alloc.n_live == usable
+        assert alloc.n_live == len(flat)
+    for blocks in live.values():
+        alloc.free(blocks)
+    assert alloc.n_free == usable and alloc.n_live == 0
+
+
+def test_allocator_double_free_raises():
+    alloc = BlockAllocator(8, 4)
+    blocks = alloc.alloc(3)
+    alloc.free(blocks)
+    with pytest.raises(RuntimeError, match="not live"):
+        alloc.free(blocks)
+    with pytest.raises(RuntimeError, match="not live"):
+        alloc.free([0])                     # the scratch block
+
+
+# ----------------------------------------------------------- GraphServe
+
+@pytest.fixture(scope="module")
+def graph_world():
+    from repro.core.graph import sbm_graph
+    cfg = get_smoke_config("graphormer_slim")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    g = sbm_graph(96, 4, p_in=0.05, p_out=0.003, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    return model, params, g
+
+
+def test_graph_serve_node_matches_task_forward(graph_world):
+    """The node endpoint must score nodes exactly like the training
+    task's forward: same reformation layout, logits gathered at the
+    inverse-permuted sequence positions."""
+    import jax.numpy as jnp
+    from repro.core.graph_model import graph_predict
+    from repro.data.graph_pipeline import prepare_node_task
+
+    model, params, g = graph_world
+    srv = GraphServe(model, params)
+    nodes = np.asarray([0, 5, 17, 60, 95])
+    out = srv.node(g, nodes)
+
+    prep = prepare_node_task(g, model.cfg, bq=32, bk=32, d_b=8)
+    inv = np.empty(g.n, np.int64)
+    inv[prep.perm] = np.arange(g.n)
+    ref = np.asarray(jax.jit(
+        lambda p, b: graph_predict(p, model.cfg, b, dense=False)
+    )(params, prep.batch)[0], np.float32)
+    want = ref[inv[nodes] + model.cfg.n_global]
+    np.testing.assert_allclose(out["logits"], want, rtol=1e-5, atol=1e-5)
+    assert (out["labels"] == want.argmax(-1)).all()
+
+
+def test_graph_serve_link_symmetric_and_cached(graph_world):
+    model, params, g = graph_world
+    srv = GraphServe(model, params)
+    a = srv.link(g, [1, 7, 30], [2, 50, 31])
+    b = srv.link(g, [2, 50, 31], [1, 7, 30])
+    np.testing.assert_allclose(a["scores"], b["scores"], rtol=1e-6)
+    assert ((a["prob"] > 0) & (a["prob"] < 1)).all()
+    # both queries + node queries share one cached reformation layout
+    srv.node(g, [0, 1])
+    assert srv.n_cached_layouts() == 1
+    # a mutated graph must re-form, not alias the stale layout
+    g2 = g.replace(feat=g.feat + 1) if hasattr(g, "replace") else None
+    if g2 is None:
+        import dataclasses
+        g2 = dataclasses.replace(g, feat=g.feat + 1)
+    assert graph_hash(g2) != graph_hash(g)
+    srv.node(g2, [0])
+    assert srv.n_cached_layouts() == 2
+
+
+def test_graph_serve_validates(graph_world):
+    model, params, g = graph_world
+    srv = GraphServe(model, params)
+    with pytest.raises(ValueError, match="node ids"):
+        srv.node(g, [g.n])
+    lm_cfg = get_smoke_config("qwen3_0_6b")
+    lm_model = build(lm_cfg)
+    with pytest.raises(ValueError, match="graph family"):
+        GraphServe(lm_model, lm_model.init(jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_serves_lm(capsys):
+    serve_main(["--arch", "qwen3_0_6b", "--requests", "3", "--batch", "2",
+                "--max-tokens", "4", "--chunk", "8", "--page", "8",
+                "--max-len", "32"])
+    out = capsys.readouterr().out
+    assert "served 3 requests" in out
+    assert "2 traced programs" in out
+    assert "p50=" in out and "p99=" in out
+
+
+def test_cli_serves_graph_archs(capsys):
+    """Graph archs are served (GraphServe), not rejected — the old CLI
+    error path is gone."""
+    serve_main(["--arch", "graphormer_slim", "--graph-nodes", "64",
+                "--queries", "4"])
+    out = capsys.readouterr().out
+    assert "GraphServe" in out
+    assert "node labels" in out and "link score" in out
+
+
+def test_cli_rejects_non_paged_families(capsys):
     with pytest.raises(SystemExit):
-        serve_main(["--arch", "graphormer_slim"])
-    assert "no autoregressive decode" in capsys.readouterr().err
+        serve_main(["--arch", "mamba2_2_7b"])
+    assert "no paged serving path" in capsys.readouterr().err
