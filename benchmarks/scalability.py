@@ -65,7 +65,7 @@ def comm_volume(p: int):
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro import compat
-        from repro.launch.hlo_analysis import comm_summary
+        from repro.analysis.ir.hlo import comm_summary
         mesh = compat.make_mesh(({p},), ("model",))
         B, S, H, Dh = 1, 4096, {p}, 64
         x = jax.ShapeDtypeStruct((B, S // {p}, H, Dh), jnp.bfloat16)
@@ -99,7 +99,7 @@ def sparse_comm_volume(p: int, *, seq: int = 4096, heads: int = 8,
         import jax, jax.numpy as jnp, numpy as np
         from repro import compat
         from repro.core.reformation import lm_local_global_layout
-        from repro.launch.hlo_analysis import comm_summary
+        from repro.analysis.ir.hlo import comm_summary
         from repro.parallel.cluster_parallel import sharded_cluster_attention
         p, S, H, Dh, bq = {p}, {seq}, {heads}, {d_head}, {bq}
         mesh = compat.make_mesh((p,), ("model",))

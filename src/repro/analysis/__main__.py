@@ -5,7 +5,15 @@ the policy rules, subtracts the checked-in baseline, optionally writes
 the machine-readable ``ANALYSIS_report.json``, and exits nonzero iff
 new violations exist. ``--update-baseline`` re-baselines the current
 tree (use only with a reviewed justification — the goal is an empty
-baseline)."""
+baseline).
+
+``--ir`` switches from source-level linting to IR-level auditing
+(``repro.analysis.ir.run``): compile the tier-1 sharded-attention and
+serve programs, run the collective-budget / pallas-grid / dtype-flow
+auditors, write ``ANALYSIS_ir_report.json`` (or ``--report PATH``),
+and exit nonzero iff error-level findings exist. The lint path never
+imports jax, so ``--ir`` can still configure fake CPU devices before
+the backend initializes."""
 
 from __future__ import annotations
 
@@ -21,13 +29,25 @@ _DEFAULT_BASELINE = pathlib.Path(__file__).parent / "baseline.json"
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repro policy linter (rules REP001-REP005; see "
-                    "docs/architecture.md 'Enforced invariants')")
+        description="repro policy linter (rules REP001-REP006) and IR "
+                    "auditor (--ir); see docs/architecture.md "
+                    "'Enforced invariants'")
     ap.add_argument("paths", nargs="*", default=["src"],
                     help="files/dirs to lint (default: src)")
+    ap.add_argument("--ir", action="store_true",
+                    help="run the IR auditors (collective budgets, pallas "
+                         "grid races, dtype flow) over the tier-1 programs "
+                         "instead of linting source")
+    ap.add_argument("--ir-programs", metavar="NAMES",
+                    default="sharded,serve",
+                    help="comma-separated program set for --ir "
+                         "(default: sharded,serve)")
+    ap.add_argument("--devices", type=int, default=4, metavar="P",
+                    help="fake CPU device count for --ir (default: 4)")
     ap.add_argument("--report", metavar="PATH", default=None,
                     help="write the machine-readable JSON report here "
-                         "(CI uploads ANALYSIS_report.json)")
+                         "(CI uploads ANALYSIS_report.json / "
+                         "ANALYSIS_ir_report.json)")
     ap.add_argument("--baseline", metavar="PATH",
                     default=str(_DEFAULT_BASELINE),
                     help="baseline JSON (default: the checked-in one); "
@@ -37,6 +57,13 @@ def main(argv=None) -> int:
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule registry and exit")
     args = ap.parse_args(argv)
+
+    if args.ir:
+        # imported lazily: ensure_devices must set XLA flags before the
+        # first jax import, and plain linting must never need a backend
+        from repro.analysis.ir import run as ir_run
+        programs = tuple(p for p in args.ir_programs.split(",") if p)
+        return ir_run.main(args.report, programs, p=args.devices)
 
     rules = lint.default_rules()
     if args.list_rules:

@@ -1,0 +1,46 @@
+"""IR-level program auditors: checks over *compiled artifacts* rather
+than source text (PR 8).
+
+The PR 6 analysis layer lints Python ASTs and counts runtime traces;
+nothing there sees what XLA actually emits. This subpackage closes that
+gap with three auditors sharing one :class:`IRFinding` vocabulary:
+
+* ``ir.hlo`` — the HLO-text parser (moved from ``launch/hlo_analysis``)
+  plus the **collective-budget** gate: ``check_collectives(compiled,
+  CollectiveBudget(...))`` fails a sharded program that exceeds its
+  O(S/P) all-to-all budget or all-gathers along the sequence axis.
+* ``ir.pallas_check`` — the **grid race detector**: ``check_grid``
+  statically verifies a kernel's (grid, BlockSpec index_maps,
+  out_shape) triple — contiguous-visit write safety, bounds,
+  divisibility, coverage.
+* ``ir.dtype_flow`` — the **dtype-flow** report: convert upcasts and
+  dot accumulator placement over a jaxpr walk (the ROADMAP item 5
+  verification rig). Needs jax; re-exported lazily.
+
+``python -m repro.analysis --ir`` runs all three against the tier-1
+sharded-attention and serve programs and writes
+``ANALYSIS_ir_report.json`` (see ``ir.run`` for the schema).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.ir.base import IRAuditError, IRFinding, errors
+from repro.analysis.ir.hlo import (CollectiveBudget, CollectiveOp,
+                                   audit_collectives, check_collectives,
+                                   collective_ops, collective_report)
+from repro.analysis.ir.pallas_check import audit_grid, check_grid
+
+_LAZY = ("DtypePolicy", "audit_dtype_flow", "check_dtype_flow",
+         "convert_events", "dot_accumulators", "dtype_report")
+
+__all__ = ["IRAuditError", "IRFinding", "errors", "CollectiveBudget",
+           "CollectiveOp", "audit_collectives", "check_collectives",
+           "collective_ops", "collective_report", "audit_grid",
+           "check_grid", *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.analysis.ir import dtype_flow
+        return getattr(dtype_flow, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

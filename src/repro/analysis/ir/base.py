@@ -1,0 +1,72 @@
+"""Shared finding/error types for the IR auditors.
+
+Every auditor in ``repro.analysis.ir`` (collective budgets, pallas grid
+races, dtype flow) reports through one ``IRFinding`` record so the
+``python -m repro.analysis --ir`` report and the pre-launch gates can
+treat them uniformly: ``level == "error"`` findings fail the gate /
+CI job, ``"warning"`` and ``"info"`` are carried into the report only.
+
+Stdlib-only on purpose — ``hlo.py`` and ``pallas_check.py`` import this
+and must stay importable without jax (the lint CLI path never touches a
+backend).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+LEVELS = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class IRFinding:
+    """One auditor observation about a compiled/lowered program.
+
+    ``auditor`` is the emitting pass ("collectives", "pallas_grid",
+    "dtype_flow"); ``op`` names the offending IR object when there is
+    one (an HLO value like ``%all-gather.3``, an output index, a jaxpr
+    primitive); ``data`` holds machine-readable details (measured
+    bytes, budgets, grid cells).
+    """
+
+    auditor: str
+    level: str
+    message: str
+    program: str = ""
+    op: str = ""
+    data: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.level not in LEVELS:
+            raise ValueError(f"IRFinding level must be one of {LEVELS}, "
+                             f"got {self.level!r}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self):
+        where = f" [{self.program}]" if self.program else ""
+        op = f" {self.op}:" if self.op else ""
+        return f"{self.auditor}/{self.level}{where}:{op} {self.message}"
+
+
+def errors(findings) -> list:
+    return [f for f in findings if f.level == "error"]
+
+
+class IRAuditError(AssertionError):
+    """Raised by the check_* gates when error-level findings exist.
+
+    Subclasses AssertionError so test suites and the existing
+    ``trace_audit`` gates treat it the same way; carries the full
+    findings list for the report writer.
+    """
+
+    def __init__(self, findings, label: str = ""):
+        findings = list(findings)
+        self.findings = findings
+        bad = errors(findings)
+        head = f"IR audit failed{f' for {label}' if label else ''}: " \
+               f"{len(bad)} error finding(s)"
+        lines = [head] + [f"  - {f}" for f in bad]
+        super().__init__("\n".join(lines))

@@ -1,0 +1,163 @@
+"""Dtype-flow auditor: where a traced program widens, narrows, and
+accumulates.
+
+The bf16/fp8 ladder (ROADMAP item 5) changes *compute* dtypes while the
+accumulator/residual dtypes must stay pinned at f32 (the
+``kernels/policy.py`` constant REP006 enforces at the source level).
+This module is the IR-level half of that contract: it walks a jaxpr —
+recursing through ``pjit``/``scan``/``cond``/``custom_vjp`` sub-jaxprs
+via :func:`repro.analysis.trace_audit.walk_jaxpr` — and reports
+
+* every ``convert_element_type``, classified as upcast / downcast by
+  itemsize, with the path of enclosing primitives (so a stray
+  f32→bf16 narrowing inside a scanned layer is attributable);
+* every ``dot_general``'s accumulation dtype — its
+  ``preferred_element_type`` if set, else its output dtype — flagged
+  when narrower than the policy accumulator.
+
+Findings are informational by default (this is a verification *rig*:
+the report shows what the program does before the kernels change);
+``DtypePolicy(strict=True)`` turns narrow accumulators into error-level
+findings for use as a gate once the ladder lands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.ir.base import IRAuditError, IRFinding, errors
+from repro.analysis.trace_audit import walk_jaxpr
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """``accum`` — required minimum accumulator dtype for dot_general
+    (by itemsize); ``strict`` — escalate violations from warning to
+    error (the gate mode for the post-ladder world)."""
+
+    accum: str = "float32"
+    strict: bool = False
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _walk_with_path(jaxpr, path=()):
+    """(path-of-enclosing-primitives, eqn) pairs; same recursion rules
+    as trace_audit.walk_jaxpr but keeping provenance for messages."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield path, eqn
+        sub_path = path + (eqn.primitive.name,)
+        for val in eqn.params.values():
+            if isinstance(val, dict):
+                val = tuple(val.values())
+            for sub in (val if isinstance(val, (list, tuple)) else (val,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    yield from _walk_with_path(sub, sub_path)
+
+
+def _jaxpr_of(fn_or_jaxpr, *args, **kwargs):
+    if hasattr(fn_or_jaxpr, "eqns") or hasattr(fn_or_jaxpr, "jaxpr"):
+        return fn_or_jaxpr
+    import jax
+    return jax.make_jaxpr(fn_or_jaxpr)(*args, **kwargs)
+
+
+def convert_events(jaxpr) -> list[dict]:
+    """Every convert_element_type in the program (sub-jaxprs included):
+    {"path", "from", "to", "widens"} — ``widens`` by itemsize."""
+    out = []
+    for path, eqn in _walk_with_path(jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = np.dtype(eqn.invars[0].aval.dtype)
+        dst = np.dtype(eqn.params.get("new_dtype", eqn.outvars[0].aval.dtype))
+        out.append({"path": "/".join(path) or "<top>",
+                    "from": src.name, "to": dst.name,
+                    "widens": dst.itemsize > src.itemsize})
+    return out
+
+
+def dot_accumulators(jaxpr) -> list[dict]:
+    """Every dot_general's accumulation dtype: preferred_element_type
+    if set, else the output dtype. {"path", "lhs", "rhs", "accum",
+    "preferred_set"}."""
+    out = []
+    for path, eqn in _walk_with_path(jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        pref = eqn.params.get("preferred_element_type")
+        accum = np.dtype(pref) if pref is not None \
+            else np.dtype(eqn.outvars[0].aval.dtype)
+        out.append({"path": "/".join(path) or "<top>",
+                    "lhs": np.dtype(eqn.invars[0].aval.dtype).name,
+                    "rhs": np.dtype(eqn.invars[1].aval.dtype).name,
+                    "accum": accum.name,
+                    "preferred_set": pref is not None})
+    return out
+
+
+def audit_dtype_flow(fn_or_jaxpr, *args,
+                     policy: DtypePolicy | None = None,
+                     label: str = "", **kwargs) -> list:
+    """Findings for one program: an info summary (upcast/downcast
+    counts, accumulator inventory) plus one warning — error under
+    ``policy.strict`` — per dot whose accumulator is narrower than
+    ``policy.accum``."""
+    policy = policy or DtypePolicy()
+    jaxpr = _jaxpr_of(fn_or_jaxpr, *args, **kwargs)
+    converts = convert_events(jaxpr)
+    dots = dot_accumulators(jaxpr)
+    ups = sum(1 for c in converts if c["widens"])
+    downs = sum(1 for c in converts if not c["widens"])
+    accums: dict[str, int] = {}
+    for d in dots:
+        accums[d["accum"]] = accums.get(d["accum"], 0) + 1
+    findings = [IRFinding(
+        auditor="dtype_flow", level="info", program=label,
+        message=f"{len(converts)} convert_element_type ({ups} upcast, "
+                f"{downs} downcast); {len(dots)} dot_general, "
+                f"accumulators {accums or '{}'}",
+        data={"converts": len(converts), "upcasts": ups,
+              "downcasts": downs, "dots": len(dots), "accums": accums})]
+    floor = np.dtype(policy.accum).itemsize
+    for d in dots:
+        if np.dtype(d["accum"]).itemsize < floor:
+            findings.append(IRFinding(
+                auditor="dtype_flow",
+                level="error" if policy.strict else "warning",
+                program=label, op=d["path"],
+                message=f"dot_general accumulates in {d['accum']} "
+                        f"(policy floor {policy.accum}) at {d['path']}: "
+                        f"{d['lhs']} x {d['rhs']}, preferred_element_type "
+                        f"{'set' if d['preferred_set'] else 'unset'}",
+                data=d))
+    return findings
+
+
+def dtype_report(fn_or_jaxpr, *args, policy: DtypePolicy | None = None,
+                 label: str = "", max_entries: int = 50, **kwargs) -> dict:
+    """JSON-ready per-program dtype-flow entry for ANALYSIS_ir_report."""
+    policy = policy or DtypePolicy()
+    jaxpr = _jaxpr_of(fn_or_jaxpr, *args, **kwargs)
+    converts = convert_events(jaxpr)
+    dots = dot_accumulators(jaxpr)
+    findings = audit_dtype_flow(jaxpr, policy=policy, label=label)
+    return {"label": label, "policy": policy.to_json(),
+            "n_converts": len(converts), "n_dots": len(dots),
+            "converts": converts[:max_entries], "dots": dots[:max_entries],
+            "findings": [f.to_json() for f in findings]}
+
+
+def check_dtype_flow(fn_or_jaxpr, *args, policy: DtypePolicy | None = None,
+                     label: str = "", **kwargs) -> list:
+    """Gate form: raise :class:`IRAuditError` on error findings (only
+    possible under ``DtypePolicy(strict=True)``); return findings."""
+    findings = audit_dtype_flow(fn_or_jaxpr, *args, policy=policy,
+                                label=label, **kwargs)
+    if errors(findings):
+        raise IRAuditError(findings, label=label or "check_dtype_flow")
+    return findings

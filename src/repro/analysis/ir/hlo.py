@@ -1,0 +1,543 @@
+"""HLO-text analyzer: trip-count-aware FLOP / collective / traffic counts
+plus the collective-budget auditor.
+
+Why: XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*
+(verified in tests/test_dryrun_machinery.py) — useless for scanned-layer
+models. This analyzer parses the compiled HLO:
+
+* splits it into computations,
+* extracts while-loop trip counts from their condition computations
+  (static scans compare the induction variable against a constant),
+* counts per-computation dot FLOPs (2*M*N*K*B from result shape x lhs
+  contracting dims), collective payload bytes, and dot I/O bytes,
+* propagates totals through the call graph (body weighted by trip count).
+
+Result: honest per-device totals for the roofline terms, including remat
+recompute (the backward while body contains the recomputed dots) and
+per-layer collectives. This is the "profile" used by §Perf iterations.
+
+On top of the parser sits the **collective-budget auditor** (PR 8):
+``collective_ops`` inventories every collective as a named
+:class:`CollectiveOp` (payload bytes, trip multiplier, ``dimensions=``
+axes), and ``check_collectives(compiled, budget)`` fails a program that
+exceeds its O(S/P) all-to-all budget or gathers along the sequence axis
+— the compiled-IR teeth behind the §III-C comm-volume claim. A
+partition-unaware placement that degenerates sparse attention into
+all-gather traffic now fails a pre-launch gate instead of a slow
+benchmark.
+
+Moved here from ``launch/hlo_analysis.py`` (which re-exports for
+back-compat) so ``benchmarks/scalability.py`` and the launch dryruns
+share one parser.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.analysis.ir.base import IRAuditError, IRFinding, errors
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DIMS_RE = re.compile(r"dimensions=\{([\d,]*)\}")
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _shape_dims(type_text: str):
+    """First dtype[shape] in text -> (dtype, [dims])."""
+    m = _SHAPE_RE.search(type_text)
+    if not m:
+        return None, []
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _all_shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    dot_io_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLL})
+    coll_count: int = 0
+    calls: list = dataclasses.field(default_factory=list)  # (name, kind)
+    while_pairs: list = dataclasses.field(default_factory=list)  # (body, cond)
+    text_lines: list = dataclasses.field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and ("->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _dot_flops_and_io(line: str, types: dict[str, str]):
+    """FLOPs for a dot line: 2 * prod(result dims) * prod(lhs contracting)."""
+    mdef = _DEF_RE.match(line)
+    if mdef is None:
+        return 0.0, 0.0
+    rhs = mdef.group(2)
+    _, res_dims = _shape_dims(rhs)
+    n_res = 1
+    for d in res_dims:
+        n_res *= d
+    # operands
+    args_m = re.search(r"dot\(([^)]*)\)", rhs)
+    operands = re.findall(r"%([\w.\-]+)", args_m.group(1)) if args_m else []
+    lhs_type = types.get(operands[0], "") if operands else ""
+    _, lhs_dims = _shape_dims(lhs_type)
+    contr = re.search(r"lhs_contracting_dims={([\d,]*)}", rhs)
+    k = 1
+    if contr and lhs_dims:
+        for ci in contr.group(1).split(","):
+            if ci:
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+    flops = 2.0 * n_res * k
+    io = _all_shape_bytes(rhs.split(", metadata")[0])
+    for op in operands:
+        io += _all_shape_bytes(types.get(op, ""))
+    return flops, io
+
+
+def _bf16_chain(body: str, types: dict, comps_lines: dict) -> bool:
+    """True if the collective's operands are converts from bf16 (XLA-CPU
+    upcasts bf16 matmul inputs to f32 and hoists the convert before the
+    collective; on TPU the payload stays bf16 — count it as such)."""
+    args_m = re.search(r"\(([^)]*)\)", body[body.index("("):])
+    if not args_m:
+        return False
+    ops = re.findall(r"%([\w.\-]+)", args_m.group(1))
+    for op in ops:
+        d = types.get(op, "")
+        if "bf16[" in d:
+            return True
+        if "convert" in op or "convert" in d:
+            cm = re.search(r"calls=%([\w.\-]+)", d)
+            if cm and any("bf16[" in ln
+                          for ln in comps_lines.get(cm.group(1), [])):
+                return True
+            if "bf16" in d:
+                return True
+    return False
+
+
+def analyze(hlo: str, entry: str | None = None) -> dict:
+    comps_lines = _split_computations(hlo)
+    stats: dict[str, CompStats] = {}
+    trip_of_cond: dict[str, int] = {}
+
+    for name, lines in comps_lines.items():
+        st = CompStats()
+        types: dict[str, str] = {}
+        for line in lines:
+            mdef = _DEF_RE.match(line)
+            if mdef:
+                types[mdef.group(1)] = mdef.group(2)
+        consts = []
+        for line in lines:
+            body = line.split("metadata=")[0]
+            if re.search(r"\bdot\(", body):
+                fl, io = _dot_flops_and_io(line, types)
+                st.dot_flops += fl
+                st.dot_io_bytes += io
+            for c in _COLL:
+                if f" {c}(" in body or f" {c}-start(" in body:
+                    pos = body.index(f" {c}")
+                    res_b = _all_shape_bytes(body[:pos])
+                    opd_b = _all_shape_bytes(body[pos:])
+                    payload = max(res_b, opd_b)
+                    if payload and "f32" in body and _bf16_chain(
+                            body[pos:], types, comps_lines):
+                        payload //= 2  # TPU-true bf16 payload
+                    st.coll_bytes[c] += payload
+                    st.coll_count += 1
+                    break
+            wm = re.search(r"while\(.*?\), condition=%([\w.\-]+), "
+                           r"body=%([\w.\-]+)", body)
+            if wm:
+                st.while_pairs.append((wm.group(2), wm.group(1)))
+            else:
+                for cm in _CALL_RE.finditer(body):
+                    st.calls.append(cm.group(1))
+            consts += [int(x) for x in _CONST_RE.findall(body)]
+        stats[name] = st
+        trip_of_cond[name] = max(consts) if consts else 1
+
+    # resolve trip count of a condition computation (max constant found
+    # there or in computations it calls)
+    def cond_trip(cname: str, depth=0) -> int:
+        if cname not in stats or depth > 3:
+            return 1
+        best = trip_of_cond.get(cname, 1)
+        for sub in stats[cname].calls:
+            best = max(best, cond_trip(sub, depth + 1))
+        return best
+
+    memo: dict[str, dict] = {}
+
+    def total(name: str, seen=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name not in stats or name in seen:
+            return {"flops": 0.0, "io": 0.0, "coll": {c: 0.0 for c in _COLL},
+                    "count": 0}
+        st = stats[name]
+        out = {"flops": st.dot_flops, "io": st.dot_io_bytes,
+               "coll": dict(st.coll_bytes), "count": st.coll_count}
+        for sub in st.calls:
+            t = total(sub, seen + (name,))
+            out["flops"] += t["flops"]
+            out["io"] += t["io"]
+            out["count"] += t["count"]
+            for c in _COLL:
+                out["coll"][c] += t["coll"][c]
+        for body, cond in st.while_pairs:
+            trip = cond_trip(cond)
+            t = total(body, seen + (name,))
+            out["flops"] += trip * t["flops"]
+            out["io"] += trip * t["io"]
+            out["count"] += trip * t["count"]
+            for c in _COLL:
+                out["coll"][c] += trip * t["coll"][c]
+        memo[name] = out
+        return out
+
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry_name = m.group(1) if m else next(iter(stats))
+    res = total(entry_name)
+    res["coll"]["count"] = res.pop("count")
+    return res
+
+
+def comm_summary(hlo: str) -> dict:
+    """Per-collective payload bytes (trip-count corrected) from compiled
+    HLO — the measurement behind the §III-C comm-volume claims. Returns
+    {"bytes": {collective: bytes}, "count": n, "total_bytes": sum,
+    "flops": dot_flops} (one analyze() pass; flops come along free)."""
+    res = analyze(hlo)
+    coll = dict(res["coll"])
+    count = coll.pop("count")
+    return {"bytes": coll, "count": count,
+            "total_bytes": sum(coll.values()), "flops": res["flops"]}
+
+
+def _computation_multipliers(hlo: str, comps_lines: dict) -> dict[str, int]:
+    """Multiplier per computation = product of enclosing while trips,
+    propagated from the entry through the call graph. Shared by
+    ``top_ops`` and ``collective_ops``."""
+    consts_of: dict[str, int] = {}
+    calls_of: dict[str, list] = {}
+    for name, lines in comps_lines.items():
+        consts, calls = [], []
+        for line in lines:
+            body = line.split("metadata=")[0]
+            consts += [int(x) for x in _CONST_RE.findall(body)]
+            wm = re.search(r"while\(.*?\), condition=%([\w.\-]+), "
+                           r"body=%([\w.\-]+)", body)
+            if wm:
+                calls.append(("while", wm.group(2), wm.group(1)))
+            else:
+                for cm in _CALL_RE.finditer(body):
+                    calls.append(("call", cm.group(1), None))
+        consts_of[name] = max(consts) if consts else 1
+        calls_of[name] = calls
+
+    def cond_trip(cname, depth=0):
+        if cname not in consts_of or depth > 3:
+            return 1
+        best = consts_of[cname]
+        for kind, sub, _ in calls_of.get(cname, []):
+            best = max(best, cond_trip(sub, depth + 1))
+        return best
+
+    mult: dict[str, int] = {}
+
+    def visit(name, m, seen=()):
+        if name in seen:
+            return
+        mult[name] = max(mult.get(name, 0), m)
+        for kind, sub, cond in calls_of.get(name, []):
+            mm = m * cond_trip(cond) if kind == "while" else m
+            visit(sub, mm, seen + (name,))
+
+    m_entry = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    visit(m_entry.group(1) if m_entry else next(iter(comps_lines)), 1)
+    return mult
+
+
+def top_ops(hlo: str, n: int = 12) -> dict:
+    """Profiler view: the biggest dot ops and collective ops, with their
+    trip-count-multiplied totals. Returns {"dots": [...], "colls": [...]}
+    entries (total_flops_or_bytes, trip, line-snippet)."""
+    comps_lines = _split_computations(hlo)
+    mult = _computation_multipliers(hlo, comps_lines)
+
+    dots, colls = [], []
+    for name, lines in comps_lines.items():
+        m = mult.get(name, 1)
+        types = {}
+        for line in lines:
+            mdef = _DEF_RE.match(line)
+            if mdef:
+                types[mdef.group(1)] = mdef.group(2)
+        for line in lines:
+            body = line.split("metadata=")[0]
+            meta = line[len(body):][:180]
+            if re.search(r"\bdot\(", body):
+                fl, io = _dot_flops_and_io(line, types)
+                dots.append((fl * m, m, body.strip()[:150], meta))
+            for c in _COLL:
+                if f" {c}(" in body or f" {c}-start(" in body:
+                    pos = body.index(f" {c}")
+                    payload = max(_all_shape_bytes(body[:pos]),
+                                  _all_shape_bytes(body[pos:]))
+                    colls.append((payload * m, m, body.strip()[:150], meta))
+                    break
+    dots.sort(key=lambda t: -t[0])
+    colls.sort(key=lambda t: -t[0])
+    return {"dots": dots[:n], "colls": colls[:n]}
+
+
+# ---------------------------------------------------------------------------
+# Collective-budget auditor (PR 8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction from the compiled HLO, as the auditor
+    sees it: ``name`` is the HLO value (``%all-to-all.7``), ``dims`` the
+    ``dimensions={...}`` attribute (the gathered/split axes — dim 1 is
+    the sequence axis in the (B, S, H, Dh) layout), ``trip`` the
+    enclosing while-loop multiplier."""
+
+    name: str
+    kind: str
+    payload_bytes: int
+    trip: int
+    dims: tuple
+    computation: str
+    shape: tuple = ()   # result shape (the gathered/exchanged output)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.payload_bytes * self.trip
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dims"] = list(self.dims)
+        d["shape"] = list(self.shape)
+        d["total_bytes"] = self.total_bytes
+        return d
+
+
+def collective_ops(hlo: str) -> list[CollectiveOp]:
+    """Inventory every collective in the program, trip-count aware.
+
+    Payload counting matches ``analyze``/``comm_summary`` (max of
+    result/operand bytes, bf16-chain corrected) so the budget the
+    auditor enforces is the same number the benchmarks report."""
+    comps_lines = _split_computations(hlo)
+    mult = _computation_multipliers(hlo, comps_lines)
+    out: list[CollectiveOp] = []
+    for cname, lines in comps_lines.items():
+        m = mult.get(cname, 1)
+        types: dict[str, str] = {}
+        for line in lines:
+            mdef = _DEF_RE.match(line)
+            if mdef:
+                types[mdef.group(1)] = mdef.group(2)
+        for line in lines:
+            body = line.split("metadata=")[0]
+            for c in _COLL:
+                if f" {c}(" not in body and f" {c}-start(" not in body:
+                    continue
+                pos = body.index(f" {c}")
+                payload = max(_all_shape_bytes(body[:pos]),
+                              _all_shape_bytes(body[pos:]))
+                if payload and "f32" in body and _bf16_chain(
+                        body[pos:], types, comps_lines):
+                    payload //= 2
+                mdef = _DEF_RE.match(line)
+                name = f"%{mdef.group(1)}" if mdef else f"<{c}>"
+                dm = _DIMS_RE.search(body[pos:])
+                dims = tuple(int(x) for x in dm.group(1).split(",")
+                             if x) if dm else ()
+                _, res_dims = _shape_dims(body[:pos])
+                out.append(CollectiveOp(name=name, kind=c,
+                                        payload_bytes=int(payload), trip=m,
+                                        dims=dims, computation=cname,
+                                        shape=tuple(res_dims)))
+                break
+    out.sort(key=lambda o: -o.total_bytes)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """What a sharded program is allowed to move.
+
+    ``a2a_bytes``/``total_bytes`` are per-device payload ceilings (None
+    = unchecked). ``forbid_seq_allgather`` rejects any all-gather whose
+    ``dimensions=`` include ``seq_dim`` and whose total payload is at
+    least ``min_gather_bytes`` — the signature of a partition-unaware
+    placement that re-materializes the full sequence on every device
+    (O(S) traffic where the cluster path promises O(S/P)).
+
+    ``seq_len`` disambiguates whole-program audits: HLO dim numbers are
+    positional, so in a full training/serving step an all-gather along
+    dim 1 of a *weight* (the sharding recipe doing its job) looks like
+    a sequence gather. When ``seq_len`` is set, only all-gathers whose
+    gathered output actually spans ``seq_len`` elements on ``seq_dim``
+    are errors; ``None`` keeps the strict positional rule (right for
+    attention-only programs where dim 1 IS the sequence).
+
+    ``seq_allgather_level`` sets the finding severity. Programs that
+    *promise* O(S/P) (the sharded cluster-attention path) use the
+    default ``"error"`` — the gate fails. Whole-step audits of the
+    plain LM path use ``"warning"``: re-materializing k/v per layer is
+    the known O(S) cost of running recipe-sharded attention without the
+    cluster path, worth surfacing in the report but not a contract
+    breach."""
+
+    a2a_bytes: int | None = None
+    total_bytes: int | None = None
+    forbid_seq_allgather: bool = True
+    seq_dim: int = 1
+    min_gather_bytes: int = 1 << 16
+    seq_len: int | None = None
+    seq_allgather_level: str = "error"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def audit_collectives(hlo: str, budget: CollectiveBudget,
+                      label: str = "") -> list[IRFinding]:
+    """Parse the compiled HLO and return findings against ``budget``.
+
+    Error findings name the offending HLO op; an info finding always
+    carries the measured per-kind byte totals for the report."""
+    ops = collective_ops(hlo)
+    by_kind: dict[str, int] = {c: 0 for c in _COLL}
+    for op in ops:
+        by_kind[op.kind] += op.total_bytes
+    findings = [IRFinding(
+        auditor="collectives", level="info", program=label,
+        message=f"{len(ops)} collective op(s), "
+                f"{sum(by_kind.values())} payload bytes",
+        data={"bytes": by_kind, "ops": len(ops)})]
+
+    if budget.forbid_seq_allgather:
+        for op in ops:
+            if (op.kind == "all-gather" and budget.seq_dim in op.dims
+                    and op.total_bytes >= budget.min_gather_bytes
+                    and (budget.seq_len is None
+                         or (len(op.shape) > budget.seq_dim
+                             and op.shape[budget.seq_dim]
+                             == budget.seq_len))):
+                findings.append(IRFinding(
+                    auditor="collectives",
+                    level=budget.seq_allgather_level, program=label,
+                    op=op.name,
+                    message=f"sequence-axis all-gather: {op.name} gathers "
+                            f"dim {budget.seq_dim} "
+                            f"({op.total_bytes} bytes, trip {op.trip}) — "
+                            f"the sharded attention path must move O(S/P), "
+                            f"not re-materialize the sequence",
+                    data=op.to_json()))
+
+    a2a = by_kind["all-to-all"]
+    if budget.a2a_bytes is not None and a2a > budget.a2a_bytes:
+        worst = next((o for o in ops if o.kind == "all-to-all"), None)
+        findings.append(IRFinding(
+            auditor="collectives", level="error", program=label,
+            op=worst.name if worst else "",
+            message=f"all-to-all payload {a2a} bytes exceeds the O(S/P) "
+                    f"budget {budget.a2a_bytes}",
+            data={"measured": a2a, "budget": budget.a2a_bytes}))
+
+    total = sum(by_kind.values())
+    if budget.total_bytes is not None and total > budget.total_bytes:
+        findings.append(IRFinding(
+            auditor="collectives", level="error", program=label,
+            op=ops[0].name if ops else "",
+            message=f"total collective payload {total} bytes exceeds "
+                    f"budget {budget.total_bytes}",
+            data={"measured": total, "budget": budget.total_bytes}))
+    return findings
+
+
+def _as_hlo_text(compiled) -> str:
+    if isinstance(compiled, str):
+        return compiled
+    if hasattr(compiled, "as_text"):        # jax Compiled / Lowered
+        return compiled.as_text()
+    raise TypeError(f"expected HLO text or an object with as_text(), "
+                    f"got {type(compiled).__name__}")
+
+
+def collective_report(compiled, budget: CollectiveBudget | None = None,
+                      label: str = "") -> dict:
+    """Measured collectives + findings as one JSON-ready dict (the
+    per-program entry of ANALYSIS_ir_report.json)."""
+    hlo = _as_hlo_text(compiled)
+    summ = comm_summary(hlo)
+    ops = collective_ops(hlo)
+    findings = audit_collectives(hlo, budget, label=label) \
+        if budget is not None else []
+    return {"label": label, "bytes": summ["bytes"], "count": summ["count"],
+            "total_bytes": summ["total_bytes"],
+            "ops": [o.to_json() for o in ops[:20]],
+            "budget": budget.to_json() if budget is not None else None,
+            "findings": [f.to_json() for f in findings]}
+
+
+def check_collectives(compiled, budget: CollectiveBudget,
+                      label: str = "") -> dict:
+    """Pre-launch gate: raise :class:`IRAuditError` (an AssertionError,
+    like the trace_audit gates) if the compiled program breaks its
+    collective budget; return the report dict otherwise."""
+    hlo = _as_hlo_text(compiled)
+    findings = audit_collectives(hlo, budget, label=label)
+    if errors(findings):
+        raise IRAuditError(findings, label=label or "check_collectives")
+    report = collective_report(hlo, budget, label=label)
+    return report

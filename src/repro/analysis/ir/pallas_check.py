@@ -1,0 +1,211 @@
+"""Static verifier for a Pallas kernel's (grid, BlockSpec, shapes) triple.
+
+Pallas gives every grid cell a block of each operand/output via the
+BlockSpec index maps. On TPU the grid is iterated row-major (last axis
+innermost, sequential), and an *output* block may legally be revisited
+only across **consecutive** steps — that is how the cluster kernel's
+innermost ``mb`` axis accumulates online-softmax partials in the block
+kept resident in VMEM. Any *non-contiguous* revisit means two separated
+grid cells write the same output block: the second silently clobbers
+the first (a write race in the reformed-layout sense of §IV — exactly
+the bug class the batched (B, H, nq, mb) grid of PR 5 makes possible).
+
+``audit_grid`` enumerates the grid and checks, per BlockSpec:
+
+* **write races** — visits to each output block form one contiguous run
+  in row-major iteration order;
+* **bounds** — every block index lands inside the (padded) operand:
+  ``0 <= idx[d] < ceil(shape[d] / block[d])``;
+* **divisibility** — block shapes divide the padded dims (the kernels
+  pre-pad; a non-dividing block means the padding step was skipped);
+* **coverage** — every output block is written at least once (a missed
+  block ships uninitialized VMEM).
+
+Data-dependent index maps (the cluster kernel's k/v maps read the
+scalar-prefetch ``block_idx``) are evaluated against the concrete
+``scalar_prefetch`` arrays, so the audit checks the *actual* gather
+targets. Index maps that cannot be evaluated (traced prefetch values)
+produce a warning finding rather than a false verdict.
+
+Run by ``kernels/ops.py`` at dispatch time in interpret/debug mode, and
+importable standalone: ``check_grid`` raises, ``audit_grid`` reports.
+No pallas import needed — specs are duck-typed on
+``.block_shape``/``.index_map`` (or plain ``(block_shape, index_map)``
+pairs).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.analysis.ir.base import IRAuditError, IRFinding, errors
+
+
+def _norm_spec(spec):
+    """(block_shape tuple, index_map) from a BlockSpec-like object or a
+    plain (block_shape, index_map) pair. None block dims count as 1."""
+    if (isinstance(spec, (tuple, list)) and len(spec) == 2
+            and callable(spec[1])):
+        block, imap = spec
+    else:
+        block = getattr(spec, "block_shape", None)
+        imap = getattr(spec, "index_map", None)
+    if block is None or imap is None:
+        raise TypeError(f"not a BlockSpec-like object: {spec!r}")
+    return tuple(1 if b is None else int(b) for b in block), imap
+
+
+def _shape_of(x):
+    return tuple(int(d) for d in getattr(x, "shape", x))
+
+
+def audit_grid(grid, in_specs=(), out_specs=(), in_shapes=(), out_shapes=(),
+               *, scalar_prefetch=(), label: str = "",
+               max_cells: int = 65536) -> list:
+    """Audit one kernel layout; returns IRFinding list (no raise).
+
+    ``grid`` — int tuple; ``*_specs`` — BlockSpec-likes (or
+    ``(block_shape, index_map)`` pairs) matching ``*_shapes`` (shape
+    tuples or arrays, *padded* sizes as passed to pallas_call);
+    ``scalar_prefetch`` — the concrete prefetch operands the index maps
+    close over (appended to the grid indices at call time, matching
+    PrefetchScalarGridSpec semantics).
+    """
+    grid = tuple(int(g) for g in grid)
+    findings: list = []
+    ncells = math.prod(grid) if grid else 1
+    if ncells > max_cells:
+        findings.append(IRFinding(
+            auditor="pallas_grid", level="warning", program=label,
+            message=f"grid {grid} has {ncells} cells > max_cells="
+                    f"{max_cells}; audit skipped (raise max_cells to "
+                    f"force full enumeration)",
+            data={"grid": list(grid), "cells": ncells}))
+        return findings
+
+    prefetch = tuple(np.asarray(p) for p in scalar_prefetch)
+    roles = []  # (role, j, block, imap, shape, nblocks)
+    for role, specs, shapes in (("in", in_specs, in_shapes),
+                                ("out", out_specs, out_shapes)):
+        for j, (spec, shape) in enumerate(zip(specs, shapes)):
+            block, imap = _norm_spec(spec)
+            shape = _shape_of(shape)
+            if len(block) != len(shape):
+                findings.append(IRFinding(
+                    auditor="pallas_grid", level="error", program=label,
+                    op=f"{role}[{j}]",
+                    message=f"block rank {len(block)} != operand rank "
+                            f"{len(shape)} (block {block}, shape {shape})",
+                    data={"block": list(block), "shape": list(shape)}))
+                continue
+            for d, (b, s) in enumerate(zip(block, shape)):
+                if s % b != 0:
+                    findings.append(IRFinding(
+                        auditor="pallas_grid", level="error", program=label,
+                        op=f"{role}[{j}]",
+                        message=f"block dim {d} ({b}) does not divide "
+                                f"padded operand dim ({s}) — pad before "
+                                f"launch (block {block}, shape {shape})",
+                        data={"dim": d, "block": list(block),
+                              "shape": list(shape)}))
+            nblocks = tuple(-(-s // b) for s, b in zip(shape, block))
+            roles.append((role, j, block, imap, shape, nblocks))
+
+    if errors(findings):
+        return findings  # rank/divisibility broken: don't enumerate
+
+    # one pass over the grid in row-major order; outputs get race +
+    # coverage tracking, inputs get bounds only
+    last_visit: dict = {}    # (j, block_idx) -> linear step of last visit
+    first_cell: dict = {}    # (j, block_idx) -> cell of first visit
+    raced: set = set()
+    oob: set = set()
+    unevaluable: set = set()
+    for t, cell in enumerate(np.ndindex(*grid)):
+        for role, j, block, imap, shape, nblocks in roles:
+            key_j = (role, j)
+            if key_j in unevaluable:
+                continue
+            try:
+                bi = tuple(int(x) for x in imap(*cell, *prefetch))
+            except Exception as e:  # traced prefetch, arity mismatch, ...
+                unevaluable.add(key_j)
+                findings.append(IRFinding(
+                    auditor="pallas_grid", level="warning", program=label,
+                    op=f"{role}[{j}]",
+                    message=f"index map not statically evaluable at cell "
+                            f"{cell}: {type(e).__name__}: {e}",
+                    data={"cell": list(cell)}))
+                continue
+            if len(bi) != len(block):
+                unevaluable.add(key_j)
+                findings.append(IRFinding(
+                    auditor="pallas_grid", level="error", program=label,
+                    op=f"{role}[{j}]",
+                    message=f"index map returned {len(bi)} indices for a "
+                            f"rank-{len(block)} block",
+                    data={"cell": list(cell), "index": list(bi)}))
+                continue
+            if key_j not in oob and any(
+                    not (0 <= x < n) for x, n in zip(bi, nblocks)):
+                oob.add(key_j)
+                findings.append(IRFinding(
+                    auditor="pallas_grid", level="error", program=label,
+                    op=f"{role}[{j}]",
+                    message=f"block index {bi} out of bounds at grid cell "
+                            f"{cell}: operand {shape} / block {block} has "
+                            f"{nblocks} blocks per dim",
+                    data={"cell": list(cell), "index": list(bi),
+                          "nblocks": list(nblocks)}))
+            if role != "out":
+                continue
+            key = (j, bi)
+            if key in last_visit and last_visit[key] != t - 1 \
+                    and key not in raced:
+                raced.add(key)
+                findings.append(IRFinding(
+                    auditor="pallas_grid", level="error", program=label,
+                    op=f"out[{j}]",
+                    message=f"write race on output block {bi}: grid cells "
+                            f"{tuple(first_cell[key])} and {cell} both "
+                            f"write it non-contiguously (row-major order) "
+                            f"— the later cell clobbers the earlier one",
+                    data={"block": list(bi),
+                          "first_cell": list(first_cell[key]),
+                          "cell": list(cell)}))
+            if key not in first_cell:
+                first_cell[key] = cell
+            last_visit[key] = t
+
+    for role, j, block, imap, shape, nblocks in roles:
+        if role != "out" or (role, j) in unevaluable:
+            continue
+        written = {bi for (jj, bi) in last_visit if jj == j}
+        total = math.prod(nblocks)
+        if len(written) < total:
+            missing = next(bi for bi in np.ndindex(*nblocks)
+                           if tuple(bi) not in written)
+            findings.append(IRFinding(
+                auditor="pallas_grid", level="warning", program=label,
+                op=f"out[{j}]",
+                message=f"{total - len(written)} of {total} output blocks "
+                        f"never written (first missing: {tuple(missing)}) "
+                        f"— those blocks ship uninitialized memory",
+                data={"missing": total - len(written), "total": total}))
+    return findings
+
+
+def check_grid(grid, in_specs=(), out_specs=(), in_shapes=(), out_shapes=(),
+               *, scalar_prefetch=(), label: str = "",
+               max_cells: int = 65536) -> list:
+    """Standalone gate: raise :class:`IRAuditError` on error findings
+    (write race, out-of-bounds, non-dividing block); return the full
+    findings list otherwise."""
+    findings = audit_grid(grid, in_specs, out_specs, in_shapes, out_shapes,
+                          scalar_prefetch=scalar_prefetch, label=label,
+                          max_cells=max_cells)
+    if errors(findings):
+        raise IRAuditError(findings, label=label or "check_grid")
+    return findings

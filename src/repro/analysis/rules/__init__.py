@@ -11,7 +11,7 @@ import ast
 
 from repro.analysis.rules import (rep001_mesh, rep002_kernels,
                                   rep003_seq_concat, rep004_traced_cast,
-                                  rep005_task_policy)
+                                  rep005_task_policy, rep006_dtype_policy)
 
 RULES = [
     rep001_mesh.RULE,
@@ -19,6 +19,7 @@ RULES = [
     rep003_seq_concat.RULE,
     rep004_traced_cast.RULE,
     rep005_task_policy.RULE,
+    rep006_dtype_policy.RULE,
 ]
 
 RULES_BY_CODE = {r.code: r for r in RULES}

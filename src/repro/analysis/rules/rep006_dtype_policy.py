@@ -1,0 +1,54 @@
+"""REP006 — kernel accumulator/residual dtypes come from the policy.
+
+Origin: PR 8 (IR auditors; pre-work for the ROADMAP item 5 bf16/fp8
+ladder). Every kernel module used to pin its own ``F32 = jnp.float32``
+(and sprinkle inline literals), so changing the compute dtype would
+mean hunting through five kernel bodies — and missing one silently
+narrows an accumulator. The dtype now lives in ONE place,
+``repro.kernels.policy`` (``F32``, ``NEG_INF``); kernel code references
+the constant. This rule forbids spelling ``jnp.float32`` /
+``jax.numpy.float32`` inline anywhere under ``repro/kernels/`` except
+``policy.py`` itself. The compiled-IR half of the same contract is
+``repro.analysis.ir.dtype_flow`` (accumulator-placement report).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import lint
+
+_LITERALS = {"jnp.float32", "jax.numpy.float32"}
+
+
+def _applies(relpath: str) -> bool:
+    return "repro/kernels/" in relpath and \
+        not relpath.endswith("kernels/policy.py")
+
+
+def _check(tree: ast.AST, relpath: str):
+    from repro.analysis.rules import dotted
+
+    out = []
+    for node in ast.walk(tree):
+        # only the full chain: ast.walk also visits the nested Attribute
+        # of jax.numpy.float32, which would double-report it
+        if isinstance(node, ast.Attribute) and node.attr == "float32" \
+                and dotted(node) in _LITERALS:
+            out.append((node.lineno,
+                        f"inline {dotted(node)} literal in a kernel "
+                        f"body — accumulator/residual dtypes are policy, "
+                        f"not per-file choices"))
+    return out
+
+
+RULE = lint.Rule(
+    code="REP006",
+    title="kernel dtypes reference the shared policy constant",
+    origin="PR 8",
+    fix_hint="from repro.kernels.policy import F32 (and NEG_INF) — one "
+             "policy object is what makes the ROADMAP item 5 dtype ladder "
+             "a one-line change instead of a five-file hunt",
+    applies=_applies,
+    check=_check,
+)

@@ -87,11 +87,17 @@ def assert_max_traces(fns, max_traces: int, *, label: str = "jitted step"):
 
 def walk_jaxpr(jaxpr):
     """Yield every eqn of a (Closed)Jaxpr, recursing into sub-jaxprs
-    (pjit bodies, scan/while/cond branches, custom_vjp calls)."""
+    (pjit bodies, scan/while/cond branches, custom_vjp calls — including
+    jaxprs nested inside dict-valued params). The bwd jaxpr of a
+    ``custom_vjp`` is only materialized under differentiation, so walk
+    ``jax.make_jaxpr(jax.grad(f))`` to see it (tests/test_ir.py pins
+    this)."""
     jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
     for eqn in jaxpr.eqns:
         yield eqn
         for val in eqn.params.values():
+            if isinstance(val, dict):
+                val = tuple(val.values())
             for sub in (val if isinstance(val, (list, tuple)) else (val,)):
                 if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
                     yield from walk_jaxpr(sub)

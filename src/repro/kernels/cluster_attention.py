@@ -38,8 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-F32 = jnp.float32
-NEG_INF = -1e30
+from repro.kernels.policy import F32, NEG_INF
 
 # trace-time launch counter (tests assert the batched per-graph path
 # issues exactly ONE pallas_call per traced forward)
@@ -152,6 +151,64 @@ def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
         _finalize_row(o_ref, lse_ref, m_s, l_s, acc_s)
 
 
+def grid_triple(B, S, H, KV, Dh, nq, mb, *, bk, per_graph=False,
+                n_buckets=None, return_residuals=False) -> dict:
+    """The (grid, BlockSpec index_maps, operand shapes) contract of the
+    forward kernel, built in ONE place so the launch below and the grid
+    auditor (``repro.analysis.ir.pallas_check``) can never desync.
+
+    Shapes are the *reshaped* operands as handed to pallas_call — q
+    ``(B*H, S, Dh)``, k/v ``(B*KV, S, Dh)``, buckets
+    ``(B, nq, mb, bq, bk)`` per-graph / ``(nq, mb, bq, bk)`` shared,
+    bias ``(H, n_buckets)``. The dict feeds ``audit_grid`` directly:
+    ``audit_grid(t["grid"], t["in_specs"], t["out_specs"],
+    t["in_shapes"], t["out_shapes"], scalar_prefetch=(idx,))``.
+
+    The out index map revisits each ``(b*H+h, qi, 0)`` block across the
+    innermost ``mb`` steps — *contiguous* revisits, the legal
+    accumulate-in-VMEM pattern; the auditor's race rule allows exactly
+    that and nothing else.
+    """
+    bq = S // nq
+    G = H // KV
+    grid = (B, H, nq, mb)
+    in_specs = [
+        pl.BlockSpec((1, bq, Dh),
+                     lambda b, h, qi, mi, idx: (b * H + h, qi, 0)),
+        pl.BlockSpec((1, bk, Dh),
+                     lambda b, h, qi, mi, idx: (
+                         b * KV + h // G,
+                         jnp.maximum(idx[b, qi, mi], 0), 0)),
+        pl.BlockSpec((1, bk, Dh),
+                     lambda b, h, qi, mi, idx: (
+                         b * KV + h // G,
+                         jnp.maximum(idx[b, qi, mi], 0), 0)),
+    ]
+    in_shapes = [(B * H, S, Dh), (B * KV, S, Dh), (B * KV, S, Dh)]
+    out_specs = [pl.BlockSpec((1, bq, Dh),
+                              lambda b, h, qi, mi, idx: (b * H + h, qi, 0))]
+    out_shapes = [(B * H, S, Dh)]
+    if return_residuals:
+        out_specs.append(pl.BlockSpec(
+            (1, bq), lambda b, h, qi, mi, idx: (b * H + h, qi)))
+        out_shapes.append((B * H, S))
+    if n_buckets is not None:
+        if per_graph:
+            in_specs.append(pl.BlockSpec(
+                (1, 1, 1, bq, bk),
+                lambda b, h, qi, mi, idx: (b, qi, mi, 0, 0)))
+            in_shapes.append((B, nq, mb, bq, bk))
+        else:
+            in_specs.append(pl.BlockSpec(
+                (1, 1, bq, bk), lambda b, h, qi, mi, idx: (qi, mi, 0, 0)))
+            in_shapes.append((nq, mb, bq, bk))
+        in_specs.append(pl.BlockSpec(
+            (H, n_buckets), lambda b, h, qi, mi, idx: (0, 0)))
+        in_shapes.append((H, n_buckets))
+    return {"grid": grid, "in_specs": in_specs, "out_specs": out_specs,
+            "in_shapes": in_shapes, "out_shapes": out_shapes}
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "interpret",
                                              "return_residuals"))
 def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
@@ -182,30 +239,25 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
     idx = jnp.broadcast_to(block_idx.astype(jnp.int32)[None] if not per_graph
                            else block_idx.astype(jnp.int32), (B, nq, mb))
 
-    grid = (B, H, nq, mb)
+    if buckets is not None and bias_table is None:
+        # zero bias: a 1-wide table is jit-safe (no data-dependent
+        # width) and numerically exact — bucket lookups clamp to row 0
+        bias_table = jnp.zeros((H, 1), F32)
+    triple = grid_triple(
+        B, S, H, KV, Dh, nq, mb, bk=bk, per_graph=per_graph,
+        n_buckets=bias_table.shape[1] if buckets is not None else None,
+        return_residuals=return_residuals)
     scratch = [pltpu.VMEM((bq, 1), F32), pltpu.VMEM((bq, 1), F32),
                pltpu.VMEM((bq, Dh), F32)]
     # the residual output only exists on the training path — forward-only
     # calls (inference, serve) don't pay the (B*H, S) f32 write
-    out_shape = [jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype)]
-    out_specs = [pl.BlockSpec((1, bq, Dh),
-                              lambda b, h, qi, mi, idx: (b * H + h, qi, 0))]
-    if return_residuals:
-        out_shape.append(jax.ShapeDtypeStruct((B * H, S), F32))
-        out_specs.append(pl.BlockSpec(
-            (1, bq), lambda b, h, qi, mi, idx: (b * H + h, qi)))
-    qkv_specs = [
-        pl.BlockSpec((1, bq, Dh),
-                     lambda b, h, qi, mi, idx: (b * H + h, qi, 0)),
-        pl.BlockSpec((1, bk, Dh),
-                     lambda b, h, qi, mi, idx: (
-                         b * KV + h // G,
-                         jnp.maximum(idx[b, qi, mi], 0), 0)),
-        pl.BlockSpec((1, bk, Dh),
-                     lambda b, h, qi, mi, idx: (
-                         b * KV + h // G,
-                         jnp.maximum(idx[b, qi, mi], 0), 0)),
-    ]
+    out_dtypes = [q.dtype, F32]
+    out_shape = [jax.ShapeDtypeStruct(s, dt)
+                 for s, dt in zip(triple["out_shapes"], out_dtypes)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=triple["grid"],
+        in_specs=triple["in_specs"], out_specs=triple["out_specs"],
+        scratch_shapes=scratch)
 
     if buckets is None:
         kernel = functools.partial(
@@ -215,22 +267,8 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
             body = kernel
             kernel = lambda i, q_, k_, v_, o, m, l, a: \
                 body(i, q_, k_, v_, o, None, m, l, a)
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1, grid=grid, in_specs=qkv_specs,
-            out_specs=out_specs, scratch_shapes=scratch)
         args = (idx, qt, kt, vt)
     else:
-        if bias_table is None:
-            # zero bias: a 1-wide table is jit-safe (no data-dependent
-            # width) and numerically exact — bucket lookups clamp to row 0
-            bias_table = jnp.zeros((H, 1), F32)
-        if per_graph:
-            bkt_spec = pl.BlockSpec(
-                (1, 1, 1, bq, bk),
-                lambda b, h, qi, mi, idx: (b, qi, mi, 0, 0))
-        else:
-            bkt_spec = pl.BlockSpec(
-                (1, 1, bq, bk), lambda b, h, qi, mi, idx: (qi, mi, 0, 0))
         kernel = functools.partial(
             _cluster_kernel_biased, sm_scale=sm_scale, causal=causal,
             block_q=bq, block_k=bk)
@@ -238,14 +276,6 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
             body = kernel
             kernel = lambda i, q_, k_, v_, bk_, bi_, o, m, l, a: \
                 body(i, q_, k_, v_, bk_, bi_, o, None, m, l, a)
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1, grid=grid,
-            in_specs=qkv_specs + [
-                bkt_spec,
-                pl.BlockSpec((H, bias_table.shape[1]),
-                             lambda b, h, qi, mi, idx: (0, 0)),
-            ],
-            out_specs=out_specs, scratch_shapes=scratch)
         args = (idx, qt, kt, vt, buckets, bias_table.astype(F32))
 
     _PALLAS_CALLS[0] += 1

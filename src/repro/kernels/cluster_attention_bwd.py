@@ -39,9 +39,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import cluster_attention as _ca
-
-F32 = jnp.float32
-NEG_INF = _ca.NEG_INF
+from repro.kernels.policy import F32, NEG_INF
 
 
 # ------------------------------------------------------ transposed layout

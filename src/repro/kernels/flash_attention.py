@@ -28,8 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-F32 = jnp.float32
-NEG_INF = -1e30
+from repro.kernels.policy import F32, NEG_INF
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,

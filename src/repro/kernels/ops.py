@@ -89,6 +89,7 @@ from repro.kernels import cluster_attention_bwd as _cab
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
+from repro.kernels.policy import F32
 
 MODES = ("auto", "ref", "interpret", "compiled")
 OPS = ("flash_attention", "cluster_attention", "ssd", "paged_attention")
@@ -286,6 +287,54 @@ def _cluster_illegal(q, k, v, block_idx, buckets, causal, mode, want_bq,
     return None
 
 
+# layouts already grid-audited this process: (dims, layout-bytes) keys —
+# eager interpret calls re-use layouts heavily and the enumeration is
+# O(grid cells), so never audit the same launch twice
+_GRID_AUDITED: set = set()
+
+
+def _grid_race_reason(q, k, block_idx, buckets, bias_table) -> str | None:
+    """Dispatch-time pallas grid audit (interpret/debug mode, or any
+    mode under REPRO_IR_AUDIT): check the forward (grid, index_map,
+    out_shape) triple — the exact one ``grid_triple`` hands to
+    pallas_call — against the concrete scalar-prefetch stream. A traced
+    ``block_idx`` cannot be audited statically (its gather targets are
+    data-dependent): skip, like the duplicate-row scan above. Returns a
+    fallback reason on error findings (never raises — dispatch policy)."""
+    if isinstance(block_idx, jax.core.Tracer):
+        return None
+    from repro.analysis.ir import errors as _ir_errors
+    from repro.analysis.ir import pallas_check
+    from repro.kernels import cluster_attention as _ca
+
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    nq, mb = block_idx.shape[-2:]
+    bq = S // nq
+    bk = buckets.shape[-1] if buckets is not None else bq
+    arr = np.asarray(block_idx, np.int32)
+    per_graph = arr.ndim == 3
+    if not per_graph:
+        arr = np.broadcast_to(arr[None], (B, nq, mb))
+    n_buckets = bias_table.shape[1] if buckets is not None else None
+    key = (B, S, H, KV, Dh, nq, mb, bk, per_graph, n_buckets,
+           hash(arr.tobytes()))
+    if key in _GRID_AUDITED:
+        return None
+    triple = _ca.grid_triple(B, S, H, KV, Dh + (-Dh % LANE), nq, mb,
+                             bk=bk, per_graph=per_graph,
+                             n_buckets=n_buckets, return_residuals=True)
+    findings = pallas_check.audit_grid(
+        triple["grid"], triple["in_specs"], triple["out_specs"],
+        triple["in_shapes"], triple["out_shapes"],
+        scalar_prefetch=(arr,), label="cluster_attention")
+    bad = _ir_errors(findings)
+    if bad:
+        return f"pallas grid audit: {bad[0].message}"
+    _GRID_AUDITED.add(key)
+    return None
+
+
 def _cluster_ref(q, k, v, block_idx, buckets, bias_table, *, causal,
                  row_chunk, bq, bk):
     if block_idx.ndim == 2:
@@ -331,7 +380,14 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None,
     block_idx = block_idx.astype(jnp.int32)
     if buckets is not None and bias_table is None:
         # zero bias; 1-wide table (bucket lookups clamp to row 0)
-        bias_table = jnp.zeros((q.shape[2], 1), jnp.float32)
+        bias_table = jnp.zeros((q.shape[2], 1), F32)
+    if interpret or os.environ.get("REPRO_IR_AUDIT", ""):
+        reason = _grid_race_reason(q, k, block_idx, buckets, bias_table)
+        if reason is not None:
+            _fallback("cluster_attention", reason)
+            return _cluster_ref(q, k, v, block_idx, buckets, bias_table,
+                                causal=causal, row_chunk=row_chunk,
+                                bq=bq, bk=bk)
     q, k, v, unpad = _pad_lanes(q, k, v)
     return unpad(_cab.cluster_attention_vjp(
         q, k, v, block_idx, buckets, bias_table, block_idx_t,

@@ -1,0 +1,25 @@
+"""The kernel dtype policy, in one place.
+
+Every Pallas kernel in this package accumulates online-softmax state,
+logsumexp residuals, and dot products in one policy-owned dtype — not
+in per-file literals. ROADMAP item 5 (bf16/fp8 compute ladder) changes
+*compute* dtypes while these accumulator/residual dtypes stay pinned;
+keeping them behind one constant means that change is a one-line diff
+here plus kernel-local compute casts, instead of a hunt through five
+kernel bodies. Lint rule REP006 enforces the discipline: kernel bodies
+may not spell ``jnp.float32`` inline — they import ``F32`` (and the
+masked-score sentinel ``NEG_INF``) from here. The IR-level half of the
+same contract is ``repro.analysis.ir.dtype_flow``, which verifies the
+*compiled* program still accumulates at this width.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# accumulator / residual / softmax-statistics dtype for all kernels
+F32 = jnp.float32
+
+# masked-score sentinel: finite (exp() underflows cleanly to 0.0) but far
+# below any real logit at F32
+NEG_INF = -1e30

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dual_attention import cluster_sparse_attention
+from repro.kernels.policy import F32
 from repro.models.layers import chunked_attention
 from repro.models.ssm import ssd_chunked
 
@@ -65,7 +66,7 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, cache_len, *,
     S = k.shape[1]
     qg = q.reshape(B, Sq, KV, G, Dh)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
-                   preferred_element_type=jnp.float32) * (Dh ** -0.5)
+                   preferred_element_type=F32) * (Dh ** -0.5)
     ln = jnp.asarray(cache_len, jnp.int32).reshape(B, 1, 1, 1, 1)
     kpos = jnp.arange(S)[None, None, None, None, :]
     if q_offset is None:
@@ -78,7 +79,7 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, cache_len, *,
     if window:
         valid = valid & ((kpos >= qpos + 1 - window) | (kpos < n_global))
     s = jnp.where(valid, s, -jnp.inf)
-    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    p = jax.nn.softmax(s.astype(F32), axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
-                     preferred_element_type=jnp.float32)
+                     preferred_element_type=F32)
     return out.reshape(B, Sq, H, Dh).astype(q.dtype)

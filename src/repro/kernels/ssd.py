@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-F32 = jnp.float32
+from repro.kernels.policy import F32
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
@@ -105,7 +105,7 @@ def ssd(x, dt, a, b, c, *, chunk: int = 256, interpret: bool = False):
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B * H, S, dh), x.dtype),
-            jax.ShapeDtypeStruct((B * H, dh, N), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, dh, N), F32),
         ],
         scratch_shapes=[pltpu.VMEM((dh, N), F32)],
         interpret=interpret,

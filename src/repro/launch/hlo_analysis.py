@@ -1,313 +1,17 @@
-"""HLO-text analyzer: trip-count-aware FLOP / collective / traffic counts.
+"""Back-compat shim: the HLO analyzer lives in ``repro.analysis.ir.hlo``.
 
-Why: XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*
-(verified in tests/test_dryrun_machinery.py) — useless for scanned-layer
-models. This analyzer parses the compiled HLO:
-
-* splits it into computations,
-* extracts while-loop trip counts from their condition computations
-  (static scans compare the induction variable against a constant),
-* counts per-computation dot FLOPs (2*M*N*K*B from result shape x lhs
-  contracting dims), collective payload bytes, and dot I/O bytes,
-* propagates totals through the call graph (body weighted by trip count).
-
-Result: honest per-device totals for the roofline terms, including remat
-recompute (the backward while body contains the recomputed dots) and
-per-layer collectives. This is the "profile" used by §Perf iterations.
+PR 8 factored the parser out of launch/ so the collective-budget
+auditor, ``benchmarks/scalability.py``, and the launch dryruns share
+one implementation. Existing imports of ``analyze`` / ``comm_summary``
+/ ``top_ops`` from here keep working; new code should import from
+``repro.analysis.ir.hlo`` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import re
+from repro.analysis.ir.hlo import (_COLL, _DTYPE_BYTES,  # noqa: F401
+                                   _all_shape_bytes, _shape_dims,
+                                   _split_computations, analyze,
+                                   comm_summary, top_ops)
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
-}
-
-_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
-_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%([\w.\-]+)")
-_CONST_RE = re.compile(r"constant\((\d+)\)")
-_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-         "collective-permute")
-
-
-def _shape_dims(type_text: str):
-    """First dtype[shape] in text -> (dtype, [dims])."""
-    m = _SHAPE_RE.search(type_text)
-    if not m:
-        return None, []
-    dt, dims = m.group(1), m.group(2)
-    return dt, [int(d) for d in dims.split(",") if d]
-
-
-def _all_shape_bytes(text: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclasses.dataclass
-class CompStats:
-    dot_flops: float = 0.0
-    dot_io_bytes: float = 0.0
-    coll_bytes: dict = dataclasses.field(
-        default_factory=lambda: {c: 0.0 for c in _COLL})
-    coll_count: int = 0
-    calls: list = dataclasses.field(default_factory=list)  # (name, kind)
-    while_pairs: list = dataclasses.field(default_factory=list)  # (body, cond)
-    text_lines: list = dataclasses.field(default_factory=list)
-
-
-def _split_computations(hlo: str) -> dict[str, list[str]]:
-    comps: dict[str, list[str]] = {}
-    cur = None
-    for line in hlo.splitlines():
-        m = _COMP_RE.match(line.strip())
-        if m and ("->" in line):
-            cur = m.group(1)
-            comps[cur] = []
-            continue
-        if line.strip() == "}":
-            cur = None
-            continue
-        if cur is not None:
-            comps[cur].append(line)
-    return comps
-
-
-def _dot_flops_and_io(line: str, types: dict[str, str]):
-    """FLOPs for a dot line: 2 * prod(result dims) * prod(lhs contracting)."""
-    mdef = _DEF_RE.match(line)
-    if mdef is None:
-        return 0.0, 0.0
-    rhs = mdef.group(2)
-    _, res_dims = _shape_dims(rhs)
-    n_res = 1
-    for d in res_dims:
-        n_res *= d
-    # operands
-    args_m = re.search(r"dot\(([^)]*)\)", rhs)
-    operands = re.findall(r"%([\w.\-]+)", args_m.group(1)) if args_m else []
-    lhs_type = types.get(operands[0], "") if operands else ""
-    _, lhs_dims = _shape_dims(lhs_type)
-    contr = re.search(r"lhs_contracting_dims={([\d,]*)}", rhs)
-    k = 1
-    if contr and lhs_dims:
-        for ci in contr.group(1).split(","):
-            if ci:
-                ci = int(ci)
-                if ci < len(lhs_dims):
-                    k *= lhs_dims[ci]
-    flops = 2.0 * n_res * k
-    io = _all_shape_bytes(rhs.split(", metadata")[0])
-    for op in operands:
-        io += _all_shape_bytes(types.get(op, ""))
-    return flops, io
-
-
-def _bf16_chain(body: str, types: dict, comps_lines: dict) -> bool:
-    """True if the collective's operands are converts from bf16 (XLA-CPU
-    upcasts bf16 matmul inputs to f32 and hoists the convert before the
-    collective; on TPU the payload stays bf16 — count it as such)."""
-    args_m = re.search(r"\(([^)]*)\)", body[body.index("("):])
-    if not args_m:
-        return False
-    ops = re.findall(r"%([\w.\-]+)", args_m.group(1))
-    for op in ops:
-        d = types.get(op, "")
-        if "bf16[" in d:
-            return True
-        if "convert" in op or "convert" in d:
-            cm = re.search(r"calls=%([\w.\-]+)", d)
-            if cm and any("bf16[" in ln
-                          for ln in comps_lines.get(cm.group(1), [])):
-                return True
-            if "bf16" in d:
-                return True
-    return False
-
-
-def analyze(hlo: str, entry: str | None = None) -> dict:
-    comps_lines = _split_computations(hlo)
-    stats: dict[str, CompStats] = {}
-    trip_of_cond: dict[str, int] = {}
-
-    for name, lines in comps_lines.items():
-        st = CompStats()
-        types: dict[str, str] = {}
-        for line in lines:
-            mdef = _DEF_RE.match(line)
-            if mdef:
-                types[mdef.group(1)] = mdef.group(2)
-        consts = []
-        for line in lines:
-            body = line.split("metadata=")[0]
-            if re.search(r"\bdot\(", body):
-                fl, io = _dot_flops_and_io(line, types)
-                st.dot_flops += fl
-                st.dot_io_bytes += io
-            for c in _COLL:
-                if f" {c}(" in body or f" {c}-start(" in body:
-                    pos = body.index(f" {c}")
-                    res_b = _all_shape_bytes(body[:pos])
-                    opd_b = _all_shape_bytes(body[pos:])
-                    payload = max(res_b, opd_b)
-                    if payload and "f32" in body and _bf16_chain(
-                            body[pos:], types, comps_lines):
-                        payload //= 2  # TPU-true bf16 payload
-                    st.coll_bytes[c] += payload
-                    st.coll_count += 1
-                    break
-            wm = re.search(r"while\(.*?\), condition=%([\w.\-]+), "
-                           r"body=%([\w.\-]+)", body)
-            if wm:
-                st.while_pairs.append((wm.group(2), wm.group(1)))
-            else:
-                for cm in _CALL_RE.finditer(body):
-                    st.calls.append(cm.group(1))
-            consts += [int(x) for x in _CONST_RE.findall(body)]
-        stats[name] = st
-        trip_of_cond[name] = max(consts) if consts else 1
-
-    # resolve trip count of a condition computation (max constant found
-    # there or in computations it calls)
-    def cond_trip(cname: str, depth=0) -> int:
-        if cname not in stats or depth > 3:
-            return 1
-        best = trip_of_cond.get(cname, 1)
-        for sub in stats[cname].calls:
-            best = max(best, cond_trip(sub, depth + 1))
-        return best
-
-    memo: dict[str, dict] = {}
-
-    def total(name: str, seen=()) -> dict:
-        if name in memo:
-            return memo[name]
-        if name not in stats or name in seen:
-            return {"flops": 0.0, "io": 0.0, "coll": {c: 0.0 for c in _COLL},
-                    "count": 0}
-        st = stats[name]
-        out = {"flops": st.dot_flops, "io": st.dot_io_bytes,
-               "coll": dict(st.coll_bytes), "count": st.coll_count}
-        for sub in st.calls:
-            t = total(sub, seen + (name,))
-            out["flops"] += t["flops"]
-            out["io"] += t["io"]
-            out["count"] += t["count"]
-            for c in _COLL:
-                out["coll"][c] += t["coll"][c]
-        for body, cond in st.while_pairs:
-            trip = cond_trip(cond)
-            t = total(body, seen + (name,))
-            out["flops"] += trip * t["flops"]
-            out["io"] += trip * t["io"]
-            out["count"] += trip * t["count"]
-            for c in _COLL:
-                out["coll"][c] += trip * t["coll"][c]
-        memo[name] = out
-        return out
-
-    entry_name = entry
-    if entry_name is None:
-        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
-        entry_name = m.group(1) if m else next(iter(stats))
-    res = total(entry_name)
-    res["coll"]["count"] = res.pop("count")
-    return res
-
-
-def comm_summary(hlo: str) -> dict:
-    """Per-collective payload bytes (trip-count corrected) from compiled
-    HLO — the measurement behind the §III-C comm-volume claims. Returns
-    {"bytes": {collective: bytes}, "count": n, "total_bytes": sum,
-    "flops": dot_flops} (one analyze() pass; flops come along free)."""
-    res = analyze(hlo)
-    coll = dict(res["coll"])
-    count = coll.pop("count")
-    return {"bytes": coll, "count": count,
-            "total_bytes": sum(coll.values()), "flops": res["flops"]}
-
-
-def top_ops(hlo: str, n: int = 12) -> dict:
-    """Profiler view: the biggest dot ops and collective ops, with their
-    trip-count-multiplied totals. Returns {"dots": [...], "colls": [...]}
-    entries (total_flops_or_bytes, trip, line-snippet)."""
-    comps_lines = _split_computations(hlo)
-    # first pass: trips per condition (reuse analyze() machinery crudely)
-    trip_for_body: dict[str, int] = {}
-    consts_of: dict[str, int] = {}
-    calls_of: dict[str, list] = {}
-    for name, lines in comps_lines.items():
-        consts, calls = [], []
-        for line in lines:
-            body = line.split("metadata=")[0]
-            consts += [int(x) for x in _CONST_RE.findall(body)]
-            wm = re.search(r"while\(.*?\), condition=%([\w.\-]+), "
-                           r"body=%([\w.\-]+)", body)
-            if wm:
-                calls.append(("while", wm.group(2), wm.group(1)))
-            else:
-                for cm in _CALL_RE.finditer(body):
-                    calls.append(("call", cm.group(1), None))
-        consts_of[name] = max(consts) if consts else 1
-        calls_of[name] = calls
-
-    def cond_trip(cname, depth=0):
-        if cname not in consts_of or depth > 3:
-            return 1
-        best = consts_of[cname]
-        for kind, sub, _ in calls_of.get(cname, []):
-            best = max(best, cond_trip(sub, depth + 1))
-        return best
-
-    # multiplier per computation = product of enclosing while trips
-    mult: dict[str, int] = {}
-
-    def visit(name, m, seen=()):
-        if name in seen:
-            return
-        mult[name] = max(mult.get(name, 0), m)
-        for kind, sub, cond in calls_of.get(name, []):
-            mm = m * cond_trip(cond) if kind == "while" else m
-            visit(sub, mm, seen + (name,))
-
-    m_entry = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
-    visit(m_entry.group(1) if m_entry else next(iter(comps_lines)), 1)
-
-    dots, colls = [], []
-    for name, lines in comps_lines.items():
-        m = mult.get(name, 1)
-        types = {}
-        for line in lines:
-            mdef = _DEF_RE.match(line)
-            if mdef:
-                types[mdef.group(1)] = mdef.group(2)
-        for line in lines:
-            body = line.split("metadata=")[0]
-            meta = line[len(body):][:180]
-            if re.search(r"\bdot\(", body):
-                fl, io = _dot_flops_and_io(line, types)
-                dots.append((fl * m, m, body.strip()[:150], meta))
-            for c in _COLL:
-                if f" {c}(" in body or f" {c}-start(" in body:
-                    pos = body.index(f" {c}")
-                    payload = max(_all_shape_bytes(body[:pos]),
-                                  _all_shape_bytes(body[pos:]))
-                    colls.append((payload * m, m, body.strip()[:150], meta))
-                    break
-    dots.sort(key=lambda t: -t[0])
-    colls.sort(key=lambda t: -t[0])
-    return {"dots": dots[:n], "colls": colls[:n]}
+__all__ = ["analyze", "comm_summary", "top_ops"]

@@ -52,6 +52,7 @@ Sharding of the pattern operands inside the shard_map:
 from __future__ import annotations
 
 import functools
+import os
 
 from jax.sharding import PartitionSpec as P
 
@@ -59,6 +60,57 @@ from repro import compat
 from repro.analysis.trace_audit import check_shard_specs
 from repro.parallel.ulysses import (_fit_dp, can_ulysses, head_to_seq_a2a,
                                     seq_to_head_a2a)
+
+
+def cluster_a2a_budget(q_shape, k_shape, dtype_bytes: int, p: int,
+                       *, slack: float = 2.0):
+    """O(S/P) all-to-all budget for one sharded attention call, in
+    per-device payload bytes (the unit ``analysis.ir.hlo`` measures).
+
+    The path moves q, k, v in and o out through tiled all_to_alls of
+    sequence-sharded tensors: each per-device a2a operand is the local
+    1/p slice, so the total payload is (bytes(q)+bytes(k)+bytes(v)+
+    bytes(o))/p. ``slack`` absorbs XLA op splitting/fusion variance; a
+    seq-axis all-gather costs p× this and blows straight through the
+    budget — the degeneration the gate exists to catch."""
+    import math
+    qb = math.prod(q_shape) * dtype_bytes
+    kb = math.prod(k_shape) * dtype_bytes
+    ideal = (2 * qb + 2 * kb) / p       # q + o, k + v
+    return int(slack * ideal)
+
+
+# shape/mesh signatures whose compiled collectives already passed the
+# budget this process — the audit costs one extra compile, so pay it
+# once per program signature, not per step
+_COLLECTIVES_AUDITED: set = set()
+
+
+def _audit_collectives(mesh, axis, p, inner, specs, seq_spec, args,
+                       label: str) -> None:
+    """REPRO_IR_AUDIT pre-launch gate: lower+compile the same shard_map
+    program from the operands' avals (works mid-trace — a fresh jit of
+    the program is compiled standalone) and fail on a seq-axis
+    all-gather or an all-to-all total above the O(S/P) budget."""
+    import jax
+
+    from repro.analysis.ir import CollectiveBudget, check_collectives
+
+    key = (tuple((tuple(a.shape), str(a.dtype)) for a in args),
+           tuple(str(s) for s in specs), tuple(mesh.shape.items()), axis)
+    if key in _COLLECTIVES_AUDITED:
+        return
+    q, k = args[0], args[1]
+    budget = CollectiveBudget(
+        a2a_bytes=cluster_a2a_budget(q.shape, k.shape, q.dtype.itemsize, p),
+        seq_dim=1, forbid_seq_allgather=True, seq_len=int(q.shape[1]))
+    shapes = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    fn = jax.jit(compat.shard_map(inner, mesh=mesh, in_specs=tuple(specs),
+                                  out_specs=seq_spec))
+    with compat.use_mesh(mesh):
+        compiled = fn.lower(*shapes).compile()
+    check_collectives(compiled, budget, label=label)   # raises IRAuditError
+    _COLLECTIVES_AUDITED.add(key)
 
 
 def can_shard_cluster(n_heads: int, n_kv: int, seq: int, p: int,
@@ -167,5 +219,10 @@ def sharded_cluster_attention(q, k, v, block_idx, buckets=None,
     names += ["bias_table"] if bias_table is not None else []
     names += ["block_idx_t"] if block_idx_t is not None else []
     check_shard_specs(mesh, specs, args, names=names)
+    # second pre-launch gate (opt-in): audit the *compiled* collectives
+    # against the O(S/P) budget — what check_shard_specs cannot see
+    if os.environ.get("REPRO_IR_AUDIT", ""):
+        _audit_collectives(mesh, axis, p, inner, specs, seq_spec, args,
+                           label="sharded_cluster_attention")
     return compat.shard_map(inner, mesh=mesh, in_specs=tuple(specs),
                             out_specs=seq_spec)(*args)

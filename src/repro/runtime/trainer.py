@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import signal
 import time
 from typing import Any, Callable
@@ -79,6 +80,11 @@ class TrainerConfig:
     # task schedule knobs (consumed through the Task protocol):
     interleave_period: int = 0   # dense step every k steps (0 = never)
     elastic_every: int = 0       # steps per task epoch (0 = frozen layout)
+    # IR audit (repro.analysis.ir): before the first step, lower+compile
+    # each loss variant's program and check its collectives (no seq-axis
+    # all-gather under a mesh) + dtype flow; error findings abort the run
+    # pre-launch. REPRO_IR_AUDIT=1 turns it on too (env wins when set).
+    ir_audit: bool = False
     # crash rescue: refresh an undonated host copy of the state every k
     # steps so the crash-consistent save survives donated-buffer deletion
     # when the jitted step itself dies mid-call (0 = off). Each refresh is
@@ -125,6 +131,7 @@ class Trainer:
             weight_decay=cfg.weight_decay, state_dtype=cfg.state_dtype)
         self.stragglers: list[StragglerReport] = []
         self.history: list[dict] = []
+        self.ir_findings: list = []
         self._preempted = False
         self._rescue: tuple[int, Any] | None = None
         self._donate = donate
@@ -209,12 +216,65 @@ class Trainer:
         sd = self.task.state_dict()
         return {"task": sd} if sd else None
 
+    # --------------------------------------------------------- ir audit
+
+    def _ir_audit_enabled(self) -> bool:
+        return bool(os.environ.get("REPRO_IR_AUDIT", "")) or \
+            self.cfg.ir_audit
+
+    def ir_audit(self, state=None, step: int = 0) -> list:
+        """First-compile IR audit (repro.analysis.ir) of every loss
+        variant's jitted step: under a mesh, the compiled collectives
+        must contain no sequence-axis all-gather (the O(S/P) contract of
+        the sharded attention path); the dtype-flow report rides along
+        for ANALYSIS_ir_report.json. Returns the findings list (stored
+        on ``self.ir_findings``); raises ``IRAuditError`` on error-level
+        findings — a pre-launch gate, like ``check_shard_specs``."""
+        from repro.analysis.ir import (CollectiveBudget, IRAuditError,
+                                       audit_collectives, errors)
+        from repro.analysis.ir.dtype_flow import audit_dtype_flow
+        if state is None:
+            state, step = self.restore_or_init()
+        findings: list = []
+        batch = self.task.batches(step)
+        budget = None
+        if self.mesh is not None:
+            # HLO dims are positional: in a whole training step, weight
+            # all-gathers along dim 1 are the recipe working as designed.
+            # Pin the check to gathers that span the batch's actual
+            # sequence length (skip it if no batch leaf reveals one),
+            # and report at warning level — the plain LM path under a
+            # recipe legitimately re-materializes k/v per layer; only
+            # the sharded cluster-attention programs promise O(S/P)
+            # (their gate in parallel/cluster_parallel errors).
+            seq = [s[1] for s in (jnp.shape(a) for a in
+                                  jax.tree_util.tree_leaves(batch))
+                   if len(s) >= 2]
+            budget = CollectiveBudget(
+                forbid_seq_allgather=bool(seq),
+                seq_len=max(seq) if seq else None,
+                seq_allgather_level="warning")
+        for name, fn in self._steps.items():
+            label = f"trainer:{name}"
+            with self._mesh_ctx():
+                if budget is not None:
+                    hlo = fn.lower(state, batch).compile().as_text()
+                    findings += audit_collectives(hlo, budget, label=label)
+                findings += audit_dtype_flow(
+                    jax.make_jaxpr(fn)(state, batch), label=label)
+        self.ir_findings = findings
+        if errors(findings):
+            raise IRAuditError(findings, label="trainer ir_audit")
+        return findings
+
     # ------------------------------------------------------------ loop
 
     def run(self, seed: int = 0):
         state, start = self.restore_or_init(seed)
         cfg = self.cfg
         task = self.task
+        if self._ir_audit_enabled():
+            self.ir_audit(state, start)
 
         old = signal.getsignal(signal.SIGTERM)
 

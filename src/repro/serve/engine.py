@@ -75,7 +75,8 @@ class ServeEngine:
     def __init__(self, model, params, *, batch_slots: int = 4,
                  page: int = 16, max_len: int = 256, chunk: int = 32,
                  num_blocks: int | None = None, sparse: bool = False,
-                 mesh_model: int = 1, eos: int | None = None):
+                 mesh_model: int = 1, eos: int | None = None,
+                 ir_audit: bool = False):
         if model.paged_decode is None or model.prefill_chunk is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged serving path "
@@ -162,6 +163,71 @@ class ServeEngine:
         self.request_stats: list[dict] = []
         self.prefill_calls = 0
         self.decode_calls = 0
+        self._ir_audit_wanted = bool(ir_audit)
+        self.ir_findings: list = []
+        self._ir_audited = False
+
+    # ----------------------------------------------------------- ir audit
+
+    def _ir_audit_enabled(self) -> bool:
+        import os
+        return self._ir_audit_wanted or \
+            bool(os.environ.get("REPRO_IR_AUDIT", ""))
+
+    def ir_audit(self) -> list:
+        """First-compile IR audit (repro.analysis.ir) of the engine's two
+        programs, from their avals — no real buffers touched, no entry
+        added to the jit dispatch cache (AOT lowering is separate), so
+        the two-traced-programs budget is unaffected. Under a mesh the
+        compiled collectives must contain no sequence-axis all-gather;
+        the dtype-flow report rides along. Stores findings on
+        ``self.ir_findings``; raises ``IRAuditError`` on error-level
+        ones."""
+        from repro.analysis.ir import (CollectiveBudget, IRAuditError,
+                                       audit_collectives, errors)
+        from repro.analysis.ir.dtype_flow import audit_dtype_flow
+
+        def aval(t):
+            return jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(np.shape(a), a.dtype), t)
+
+        i32 = np.int32
+        progs = {
+            "serve:prefill": (self._prefill, (
+                aval(self.params), aval(self.pool),
+                jax.ShapeDtypeStruct((1, self.chunk), i32),
+                jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32),
+                jax.ShapeDtypeStruct((1, self.nmax), i32))),
+            "serve:decode": (self._decode, (
+                aval(self.params), aval(self.pool),
+                jax.ShapeDtypeStruct((self.B, 1), i32),
+                jax.ShapeDtypeStruct((self.B,), i32),
+                jax.ShapeDtypeStruct((self.B, self.nmax), i32))),
+        }
+        # seq_len pins the check to ops that actually span the engine's
+        # sequence budget (weight gathers from the decode recipe share
+        # HLO dim 1), at warning level: only the cluster-attention
+        # programs promise O(S/P), the plain paged path may legally
+        # gather — but it should be visible in the report if it does
+        budget = CollectiveBudget(forbid_seq_allgather=True,
+                                  seq_len=self.max_len,
+                                  seq_allgather_level="warning") \
+            if self.mesh is not None else None
+        mesh_ctx = (compat.use_mesh(self.mesh) if self.mesh is not None
+                    else contextlib.nullcontext())
+        findings: list = []
+        with mesh_ctx:
+            for label, (fn, args) in progs.items():
+                if budget is not None:
+                    hlo = fn.lower(*args).compile().as_text()
+                    findings += audit_collectives(hlo, budget, label=label)
+                findings += audit_dtype_flow(
+                    jax.make_jaxpr(fn)(*args), label=label)
+        self.ir_findings = findings
+        self._ir_audited = True
+        if errors(findings):
+            raise IRAuditError(findings, label="serve ir_audit")
+        return findings
 
     # ------------------------------------------------------------ metrics
 
@@ -308,6 +374,8 @@ class ServeEngine:
         NEW traces, so a warm engine must add zero)."""
         self._t0 = time.perf_counter()
         budget = 2 if self.traced_programs() == 0 else 0
+        if self._ir_audit_enabled() and not self._ir_audited:
+            self.ir_audit()   # pre-launch gate: raises on error findings
         mesh_ctx = (compat.use_mesh(self.mesh) if self.mesh is not None
                     else contextlib.nullcontext())
         with assert_max_traces(self._programs, budget,

@@ -1,4 +1,4 @@
-"""repro.analysis: policy linter (REP001-REP005) + trace auditor.
+"""repro.analysis: policy linter (REP001-REP006) + trace auditor.
 
 Every rule gets a positive (fires on a minimal violation) and a negative
 (clean idiomatic code passes) fixture test; fixtures are written into a
@@ -46,7 +46,8 @@ def _codes(violations):
 def test_rule_registry_is_complete():
     codes = [r.code for r in RULES]
     assert codes == sorted(set(codes)), "duplicate or unsorted rule codes"
-    assert codes == ["REP001", "REP002", "REP003", "REP004", "REP005"]
+    assert codes == ["REP001", "REP002", "REP003", "REP004", "REP005",
+                     "REP006"]
     for r in RULES:
         assert r.title and r.origin and r.fix_hint
         assert RULES_BY_CODE[r.code] is r
@@ -209,6 +210,47 @@ def test_rep005_clean_trainer_and_registry_dispatch(tmp_path):
             """,
     })
     assert "REP005" not in _codes(vs), [v.format() for v in vs]
+
+
+# --------------------------------------------- REP006: kernel dtype policy
+
+def test_rep006_fires_on_inline_float32_in_kernels(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/kernels/bad.py": """\
+        import jax.numpy as jnp
+
+        def kernel(acc_ref, x):
+            acc = jnp.zeros((8, 128), jnp.float32)
+            return acc + x.astype(jax.numpy.float32)
+        """})
+    hits = [v for v in vs if v.code == "REP006"]
+    assert len(hits) == 2, [v.format() for v in vs]
+    assert all("policy" in v.fix_hint for v in hits)
+
+
+def test_rep006_clean_via_policy_and_out_of_scope(tmp_path):
+    vs = _lint_tree(tmp_path, {
+        # kernel code referencing the shared constant is the idiom
+        "src/repro/kernels/good.py": """\
+            from repro.kernels.policy import F32, NEG_INF
+
+            def kernel(x):
+                return x.astype(F32) + NEG_INF
+            """,
+        # policy.py itself is the one legal home of the literal
+        "src/repro/kernels/policy.py": """\
+            import jax.numpy as jnp
+
+            F32 = jnp.float32
+            """,
+        # non-kernel code is out of scope
+        "src/repro/models/host.py": """\
+            import jax.numpy as jnp
+
+            def f(x):
+                return x.astype(jnp.float32)
+            """,
+    })
+    assert "REP006" not in _codes(vs), [v.format() for v in vs]
 
 
 # ------------------------------------- suppression / baseline / REP000
