@@ -22,17 +22,12 @@ from repro.models import build  # noqa: E402
 from repro.optim.adamw import AdamW  # noqa: E402
 
 
-def timeit(fn, *args, warmup=1, iters=3):
-    """Median wall seconds of a jitted call (CPU numbers; reported as
-    'cpu_wall' — TPU perf comes from the §Roofline dry-run terms)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+from repro.tune.cases import cluster_grad_case  # noqa: E402,F401
+from repro.tune.timing import timeit  # noqa: E402,F401
+
+# timeit and cluster_grad_case moved to repro.tune (the autotuner times
+# the EXACT tier-1 bench case through the same rig); re-exported here so
+# every benchmark keeps its import path.
 
 
 def row(name: str, us_per_call: float, derived: str = ""):
@@ -146,42 +141,3 @@ class GraphTrainBench:
         if test.sum() == 0:
             return 0.0
         return float((pred[test] == self.eval_labels[test]).mean())
-
-
-def cluster_grad_case(n_nodes: int, *, bq: int = 64, d_b: int = 8,
-                      heads: int = 4, d_head: int = 32, seed: int = 0):
-    """Shared rig for the fwd-vs-fwd+bwd kernel benchmarks (run.py bench
-    JSON and attention_breakdown --grad): one SBM graph layout + the
-    jitted forward-only and value_and_grad closures over
-    ops.cluster_attention, per dispatch mode — so both benchmarks measure
-    the same case and cannot drift apart."""
-    from repro.core.graph import sbm_graph
-    from repro.core.reformation import build_layout
-    from repro.kernels import ops as kops
-
-    g = sbm_graph(n_nodes, 4, p_in=min(0.5, 40.0 / n_nodes),
-                  p_out=1.0 / n_nodes, seed=seed)
-    lay = build_layout(g, bq=bq, bk=bq, k_clusters=4, d_b=d_b, n_global=1)
-    S = lay.seq_len
-    key = jax.random.PRNGKey(seed)
-    q = jax.random.normal(key, (1, S, heads, d_head))
-    bi = jnp.asarray(lay.block_idx)[None]
-    bu = jnp.asarray(lay.buckets)[None]
-    bit = jnp.asarray(lay.block_idx_t)[None]
-    bt = jax.random.normal(jax.random.fold_in(key, 1),
-                           (heads, lay.n_buckets)) * 0.2
-
-    def fns(mode: str):
-        """(forward-only, value_and_grad) jitted fresh under ``mode`` —
-        a fresh jit per mode, because dispatch resolves at trace time and
-        a cached executable would silently keep the previous mode."""
-        kops.set_mode(mode, "cluster_attention")
-
-        def loss(q, bt):
-            return kops.cluster_attention(q, q, q, bi, bu, bt, bit) \
-                .astype(jnp.float32).sum()
-
-        return (jax.jit(loss),
-                jax.jit(jax.value_and_grad(loss, argnums=(0, 1))))
-
-    return {"lay": lay, "seq_len": S, "q": q, "bt": bt, "fns": fns}

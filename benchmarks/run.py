@@ -49,16 +49,10 @@ BENCH_SCHEMA = ("op", "mode", "seq_len", "fwd_us", "bwd_us", "peak_bytes")
 
 def _compile(jitted, *args):
     """AOT-compile once and read XLA's temp-buffer estimate from the SAME
-    executable the timing loop then calls — no double compile."""
-    try:
-        compiled = jitted.lower(*args).compile()
-    except Exception:  # noqa: BLE001 — backend without AOT lowering
-        return jitted, None
-    try:
-        peak = int(compiled.memory_analysis().temp_size_in_bytes)
-    except Exception:  # noqa: BLE001 — backend without memory_analysis
-        peak = None
-    return compiled, peak
+    executable the timing loop then calls — no double compile. (Shared
+    with the autotuner's timing harness — repro.tune.timing.)"""
+    from repro.tune.timing import compile_peak
+    return compile_peak(jitted, *args)
 
 
 def _record(op, mode, seq_len, fwd_us, bwd_us, peak_bytes):

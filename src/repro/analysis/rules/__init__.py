@@ -11,7 +11,8 @@ import ast
 
 from repro.analysis.rules import (rep001_mesh, rep002_kernels,
                                   rep003_seq_concat, rep004_traced_cast,
-                                  rep005_task_policy, rep006_dtype_policy)
+                                  rep005_task_policy, rep006_dtype_policy,
+                                  rep007_schedule_literals)
 
 RULES = [
     rep001_mesh.RULE,
@@ -20,6 +21,7 @@ RULES = [
     rep004_traced_cast.RULE,
     rep005_task_policy.RULE,
     rep006_dtype_policy.RULE,
+    rep007_schedule_literals.RULE,
 ]
 
 RULES_BY_CODE = {r.code: r for r in RULES}

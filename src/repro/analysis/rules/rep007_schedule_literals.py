@@ -1,0 +1,77 @@
+"""REP007 — kernel block/tile sizes come from the schedule tables.
+
+Origin: PR 9 (kernel autotuning subsystem). Block sizes used to live as
+per-file literal defaults (``block_q=128`` in flash, ``chunk=256`` in
+ssd, ``row_chunk=8`` in dispatch) — exactly the constants the autotuner
+now owns. A literal default in a kernel signature silently shadows the
+winner table: the call compiles, runs, and never consults the tuned
+schedule. The constants now live in ONE place,
+``repro.tune.schedule.DEFAULT_SCHEDULES`` (consulted by
+``kernels/ops.resolve_schedule``, winner table first); kernel modules
+take the sizes as required arguments. This rule forbids integer
+literals for schedule-shaped parameters (``block_q``/``block_k``/
+``bq``/``bk``/``chunk``/``row_chunk``) — both as signature defaults and
+as call keywords — anywhere under ``repro/kernels/`` except
+``kernels/policy.py`` (the layout-constant home: LANE/SUBLANE live
+there by design).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import lint
+
+_SCHEDULE_PARAMS = {"block_q", "block_k", "bq", "bk", "chunk", "row_chunk"}
+
+
+def _applies(relpath: str) -> bool:
+    return "repro/kernels/" in relpath and \
+        not relpath.endswith("kernels/policy.py")
+
+
+def _is_int_literal(node: ast.AST) -> bool:
+    # bool is an int subclass; True/False are not block sizes
+    return isinstance(node, ast.Constant) \
+        and isinstance(node.value, int) \
+        and not isinstance(node.value, bool)
+
+
+def _check(tree: ast.AST, relpath: str):
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            pos = a.posonlyargs + a.args
+            for arg, default in zip(pos[len(pos) - len(a.defaults):],
+                                    a.defaults):
+                if arg.arg in _SCHEDULE_PARAMS and _is_int_literal(default):
+                    out.append((default.lineno,
+                                f"literal default {arg.arg}="
+                                f"{default.value} in a kernel signature"))
+            for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+                if default is not None and arg.arg in _SCHEDULE_PARAMS \
+                        and _is_int_literal(default):
+                    out.append((default.lineno,
+                                f"literal default {arg.arg}="
+                                f"{default.value} in a kernel signature"))
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg in _SCHEDULE_PARAMS and _is_int_literal(kw.value):
+                    out.append((kw.value.lineno,
+                                f"literal {kw.arg}={kw.value.value} at a "
+                                f"kernel call site"))
+    return out
+
+
+RULE = lint.Rule(
+    code="REP007",
+    title="kernel block sizes resolve through the schedule tables",
+    origin="PR 9",
+    fix_hint="take the size as a required argument and let "
+             "kernels/ops.resolve_schedule supply it (winner table first, "
+             "repro.tune.schedule.DEFAULT_SCHEDULES as the backstop) — a "
+             "literal here silently shadows every tuned schedule",
+    applies=_applies,
+    check=_check,
+)

@@ -51,6 +51,19 @@ def pallas_call_count() -> int:
     return _PALLAS_CALLS[0]
 
 
+def extend_bias_table(bias_table):
+    """The ``fuse_bias`` rewrite's bias operand: the ``(H, n_buckets)``
+    table with one trailing ``NEG_INF`` sentinel column appended, so the
+    kernel's ``jnp.take(..., mode="wrap")`` routes masked positions
+    (``bkt = -1``) onto it and ``s + bias`` replaces the clip+where pair.
+    Exact in fp32 (``s + NEG_INF == NEG_INF`` for every finite score the
+    kernels produce); ``-1`` is the ONLY negative the layout builders
+    emit — any other negative would wrap onto a real bias row."""
+    bt = bias_table.astype(F32)
+    sentinel = jnp.full((bt.shape[0], 1), NEG_INF, F32)
+    return jnp.concatenate([bt, sentinel], axis=1)
+
+
 def _finalize_row(o_ref, lse_ref, m_s, l_s, acc_s):
     """Write the output block and (training path: ``lse_ref`` is None on
     forward-only calls) its logsumexp residual from the online-softmax
@@ -66,7 +79,7 @@ def _finalize_row(o_ref, lse_ref, m_s, l_s, acc_s):
 
 def _cluster_kernel(idx_ref,                 # scalar-prefetch (B, nq, mb)
                     q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
-                    sm_scale, causal, block_q, block_k):
+                    sm_scale, causal, block_q, block_k, hoist_scale=False):
     b = pl.program_id(0)
     qi = pl.program_id(2)
     mi = pl.program_id(3)
@@ -83,9 +96,13 @@ def _cluster_kernel(idx_ref,                 # scalar-prefetch (B, nq, mb)
     @pl.when(blk >= 0)
     def _compute():
         q = q_ref[0].astype(F32)
+        if hoist_scale:       # scale the (bq, Dh) q tile, not every score
+            q = q * sm_scale
         k = k_ref[0].astype(F32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32) * sm_scale
+                                preferred_element_type=F32)
+        if not hoist_scale:
+            s = s * sm_scale
         if causal:
             qpos = qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0)
@@ -109,8 +126,11 @@ def _cluster_kernel(idx_ref,                 # scalar-prefetch (B, nq, mb)
 
 def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
                            o_ref, lse_ref, m_s, l_s, acc_s, *,
-                           sm_scale, causal, block_q, block_k):
-    """Variant with int8 bucket masks + per-head bias table (graph mode)."""
+                           sm_scale, causal, block_q, block_k,
+                           hoist_scale=False, fuse_bias=False):
+    """Variant with int8 bucket masks + per-head bias table (graph mode).
+    Under ``fuse_bias`` the bias operand already carries the trailing
+    NEG_INF sentinel column (``extend_bias_table``)."""
     b = pl.program_id(0)
     h = pl.program_id(1)
     qi = pl.program_id(2)
@@ -128,13 +148,25 @@ def _cluster_kernel_biased(idx_ref, q_ref, k_ref, v_ref, bkt_ref, bias_ref,
     @pl.when(blk >= 0)
     def _compute():
         q = q_ref[0].astype(F32)
+        if hoist_scale:       # scale the (bq, Dh) q tile, not every score
+            q = q * sm_scale
         k = k_ref[0].astype(F32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32) * sm_scale
+                                preferred_element_type=F32)
+        if not hoist_scale:
+            s = s * sm_scale
         bkt = bkt_ref[...].reshape(block_q, block_k).astype(jnp.int32)
-        table = bias_ref[h]                            # (n_buckets,)
-        bias = jnp.take(table, jnp.maximum(bkt, 0), axis=0, mode="clip")
-        s = jnp.where(bkt >= 0, s + bias, NEG_INF)
+        table = bias_ref[h]                # (n_buckets[+sentinel],)
+        if fuse_bias:
+            # masked bkt = -1 wraps onto the sentinel NEG_INF column;
+            # s + NEG_INF == NEG_INF exactly in f32, so the where-pair
+            # below is subsumed by one add
+            bias = jnp.take(table, bkt, axis=0, mode="wrap")
+            s = s + bias
+        else:
+            bias = jnp.take(table, jnp.maximum(bkt, 0), axis=0,
+                            mode="clip")
+            s = jnp.where(bkt >= 0, s + bias, NEG_INF)
         m_prev = m_s[...]
         m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
         m_new = jnp.maximum(m_new, NEG_INF)            # all-masked guard
@@ -210,10 +242,12 @@ def grid_triple(B, S, H, KV, Dh, nq, mb, *, bk, per_graph=False,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "interpret",
-                                             "return_residuals"))
+                                             "return_residuals",
+                                             "hoist_scale", "fuse_bias"))
 def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
                       causal: bool = False, interpret: bool = False,
-                      return_residuals: bool = False):
+                      return_residuals: bool = False,
+                      hoist_scale: bool = False, fuse_bias: bool = False):
     """q (B,S,H,Dh); k/v (B,S,KV,Dh); block_idx (nq, mb) int32 shared
     across the batch OR (B, nq, mb) per-graph layouts — both run as ONE
     pallas_call (the grid carries the batch dim and the scalar-prefetch
@@ -221,7 +255,14 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
     (B, nq, mb, bq, bk) int8 optional; bias_table (H, n_buckets).
     Block sizes are implied: bq = S // nq, bk from buckets or = bq.
     ``return_residuals=True`` also returns the per-row logsumexp
-    ``(B*H, S)`` f32 for the recomputation backward."""
+    ``(B*H, S)`` f32 for the recomputation backward.
+
+    ``hoist_scale`` / ``fuse_bias`` are the autotuner's dataflow rewrites
+    (same math, fewer vector ops — see ``repro.tune.schedule``):
+    ``hoist_scale`` multiplies the softmax scale onto the q tile before
+    the k-loop dot; ``fuse_bias`` (bucketed calls only) extends the bias
+    table with a NEG_INF sentinel column so the mask select fuses into
+    the lookup."""
     B, S, H, Dh = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -239,10 +280,15 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
     idx = jnp.broadcast_to(block_idx.astype(jnp.int32)[None] if not per_graph
                            else block_idx.astype(jnp.int32), (B, nq, mb))
 
+    fuse_bias = fuse_bias and buckets is not None
     if buckets is not None and bias_table is None:
         # zero bias: a 1-wide table is jit-safe (no data-dependent
         # width) and numerically exact — bucket lookups clamp to row 0
         bias_table = jnp.zeros((H, 1), F32)
+    if fuse_bias:
+        # extend BEFORE grid_triple so n_buckets below picks up the
+        # sentinel column and the audited triple matches the launch
+        bias_table = extend_bias_table(bias_table)
     triple = grid_triple(
         B, S, H, KV, Dh, nq, mb, bk=bk, per_graph=per_graph,
         n_buckets=bias_table.shape[1] if buckets is not None else None,
@@ -262,7 +308,7 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
     if buckets is None:
         kernel = functools.partial(
             _cluster_kernel, sm_scale=sm_scale, causal=causal, block_q=bq,
-            block_k=bk)
+            block_k=bk, hoist_scale=hoist_scale)
         if not return_residuals:
             body = kernel
             kernel = lambda i, q_, k_, v_, o, m, l, a: \
@@ -271,7 +317,8 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None, *,
     else:
         kernel = functools.partial(
             _cluster_kernel_biased, sm_scale=sm_scale, causal=causal,
-            block_q=bq, block_k=bk)
+            block_q=bq, block_k=bk, hoist_scale=hoist_scale,
+            fuse_bias=fuse_bias)
         if not return_residuals:
             body = kernel
             kernel = lambda i, q_, k_, v_, bk_, bi_, o, m, l, a: \

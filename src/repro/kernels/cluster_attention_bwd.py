@@ -77,11 +77,21 @@ def derive_block_idx_t(block_idx, nk: int):
 
 # ------------------------------------------------------------- dQ kernel
 
-def _recompute_scores(q_ref, k_ref, sm_scale, block_q, block_k):
+def _recompute_scores(q_ref, k_ref, sm_scale, block_q, block_k,
+                      hoist_scale=False):
+    """Rebuild the block's scores EXACTLY as the forward did (the lse
+    residual bakes in the forward's op order, so the backward must mirror
+    the ``hoist_scale`` rewrite). The returned ``q`` is always UNSCALED:
+    the dK accumulation applies ``sm_scale`` explicitly — contracting
+    against a scaled q would double it to ``sm_scale**2``."""
     q = q_ref[0].astype(F32)
     k = k_ref[0].astype(F32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=F32) * sm_scale
+    if hoist_scale:
+        s = jax.lax.dot_general(q * sm_scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)
+    else:
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * sm_scale
     return q, k, s
 
 
@@ -93,15 +103,21 @@ def _causal_mask(s, qi, ki, block_q, block_k):
     return jnp.where(qpos >= kpos, s, NEG_INF)
 
 
-def _bucket_bias(bkt_ref, bias_ref, h, s, block_q, block_k):
+def _bucket_bias(bkt_ref, bias_ref, h, s, block_q, block_k,
+                 fuse_bias=False):
     bkt = bkt_ref[...].reshape(block_q, block_k).astype(jnp.int32)
     table = bias_ref[h]
+    if fuse_bias:
+        # mirror of the forward's fused lookup: the operand carries the
+        # sentinel NEG_INF column, masked bkt = -1 wraps onto it
+        return bkt, s + jnp.take(table, bkt, axis=0, mode="wrap")
     bias = jnp.take(table, jnp.maximum(bkt, 0), axis=0, mode="clip")
     return bkt, jnp.where(bkt >= 0, s + bias, NEG_INF)
 
 
 def _dq_kernel(idx_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
-               dq_ref, acc_s, *, sm_scale, causal, block_q, block_k):
+               dq_ref, acc_s, *, sm_scale, causal, block_q, block_k,
+               hoist_scale=False):
     b = pl.program_id(0)
     qi = pl.program_id(2)
     mi = pl.program_id(3)
@@ -115,7 +131,8 @@ def _dq_kernel(idx_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
 
     @pl.when(blk >= 0)
     def _compute():
-        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q, block_k)
+        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q,
+                                    block_k, hoist_scale)
         if causal:
             s = _causal_mask(s, qi, blk, block_q, block_k)
         do = do_ref[0].astype(F32)
@@ -134,7 +151,8 @@ def _dq_kernel(idx_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
 
 def _dq_kernel_biased(idx_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
                       bkt_ref, bias_ref, dq_ref, db_ref, acc_s, db_s, *,
-                      sm_scale, block_q, block_k, n_buckets):
+                      sm_scale, block_q, block_k, n_buckets,
+                      hoist_scale=False, fuse_bias=False):
     # no causal branch: the biased FORWARD kernel has none (masking lives
     # in the buckets; ops.py rejects causal+buckets), and the backward
     # must recompute scores under exactly the forward's masking
@@ -153,8 +171,10 @@ def _dq_kernel_biased(idx_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
 
     @pl.when(blk >= 0)
     def _compute():
-        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q, block_k)
-        bkt, s = _bucket_bias(bkt_ref, bias_ref, h, s, block_q, block_k)
+        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q,
+                                    block_k, hoist_scale)
+        bkt, s = _bucket_bias(bkt_ref, bias_ref, h, s, block_q, block_k,
+                              fuse_bias)
         do = do_ref[0].astype(F32)
         p = jnp.exp(s - lse_ref[0][:, None])
         dp = jax.lax.dot_general(do, v_ref[0].astype(F32),
@@ -164,8 +184,10 @@ def _dq_kernel_biased(idx_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
         acc_s[...] += sm_scale * jax.lax.dot_general(
             ds, k, (((1,), (0,)), ((), ())), preferred_element_type=F32)
         # bucket the raw dS (masked entries have p = 0 => ds = 0) with a
-        # single one-hot contraction; the clip mirrors the forward's
-        # mode="clip" table lookup
+        # single one-hot contraction at the ORIGINAL n_buckets width —
+        # under fuse_bias the bias OPERAND is one sentinel column wider,
+        # but the sentinel never receives gradient (masked ds = 0) and
+        # the returned dbias keeps the caller's table width
         bc = jnp.clip(bkt, 0, n_buckets - 1).reshape(block_q * block_k, 1)
         one_hot = (bc == jax.lax.broadcasted_iota(
             jnp.int32, (block_q * block_k, n_buckets), 1)).astype(F32)
@@ -183,7 +205,7 @@ def _dq_kernel_biased(idx_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
 
 def _dkv_kernel(idxt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
                 dk_ref, dv_ref, dk_s, dv_s, *, sm_scale, causal, block_q,
-                block_k):
+                block_k, hoist_scale=False):
     b = pl.program_id(0)
     ki = pl.program_id(2)
     ti = pl.program_id(3)
@@ -198,7 +220,8 @@ def _dkv_kernel(idxt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
 
     @pl.when(qrow >= 0)
     def _compute():
-        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q, block_k)
+        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q,
+                                    block_k, hoist_scale)
         if causal:
             s = _causal_mask(s, qrow, ki, block_q, block_k)
         do = do_ref[0].astype(F32)
@@ -220,7 +243,8 @@ def _dkv_kernel(idxt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
 
 def _dkv_kernel_biased(idxt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
                        dl_ref, bkt_ref, bias_ref, dk_ref, dv_ref, dk_s,
-                       dv_s, *, sm_scale, block_q, block_k):
+                       dv_s, *, sm_scale, block_q, block_k,
+                       hoist_scale=False, fuse_bias=False):
     # no causal branch — see _dq_kernel_biased
     b = pl.program_id(0)
     h = pl.program_id(1)
@@ -237,8 +261,10 @@ def _dkv_kernel_biased(idxt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
 
     @pl.when(qrow >= 0)
     def _compute():
-        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q, block_k)
-        _, s = _bucket_bias(bkt_ref, bias_ref, h, s, block_q, block_k)
+        q, k, s = _recompute_scores(q_ref, k_ref, sm_scale, block_q,
+                                    block_k, hoist_scale)
+        _, s = _bucket_bias(bkt_ref, bias_ref, h, s, block_q, block_k,
+                            fuse_bias)
         do = do_ref[0].astype(F32)
         p = jnp.exp(s - lse_ref[0][:, None])
         dv_s[...] += jax.lax.dot_general(
@@ -259,9 +285,11 @@ def _dkv_kernel_biased(idxt_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
 # ------------------------------------------------------------ bwd driver
 
 @functools.partial(jax.jit, static_argnames=("causal", "interpret",
-                                             "with_bias"))
+                                             "with_bias", "hoist_scale",
+                                             "fuse_bias"))
 def _cluster_bwd(q, k, v, g, out, lse, block_idx, buckets, bias_table,
-                 block_idx_t, *, causal, interpret, with_bias):
+                 block_idx_t, *, causal, interpret, with_bias,
+                 hoist_scale=False, fuse_bias=False):
     B, S, H, Dh = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -308,7 +336,13 @@ def _cluster_bwd(q, k, v, g, out, lse, block_idx, buckets, bias_table,
         pl.BlockSpec((1, bq), lambda b, h, qi, mi, idx: (b * H + h, qi)),
     ]
     if with_bias:
+        # dbias (one-hot width, db output) stays at the ORIGINAL table
+        # width; under fuse_bias the bias OPERAND grows the sentinel
+        # column, exactly like the forward launch
         nb = bias_table.shape[1]
+        bias_op = (_ca.extend_bias_table(bias_table) if fuse_bias
+                   else bias_table.astype(F32))
+        nb_op = bias_op.shape[1]
         if per_graph:
             bkt_spec = pl.BlockSpec(
                 (1, 1, 1, bq, bk),
@@ -316,13 +350,15 @@ def _cluster_bwd(q, k, v, g, out, lse, block_idx, buckets, bias_table,
         else:
             bkt_spec = pl.BlockSpec(
                 (1, 1, bq, bk), lambda b, h, qi, mi, idx: (qi, mi, 0, 0))
-        bias_spec = pl.BlockSpec((H, nb), lambda b, h, qi, mi, idx: (0, 0))
-        bias_args = (buckets, bias_table.astype(F32))
+        bias_spec = pl.BlockSpec((H, nb_op),
+                                 lambda b, h, qi, mi, idx: (0, 0))
+        bias_args = (buckets, bias_op)
 
         _ca._PALLAS_CALLS[0] += 1
         dqt, db_part = pl.pallas_call(
             functools.partial(_dq_kernel_biased, sm_scale=sm_scale,
-                              block_q=bq, block_k=bk, n_buckets=nb),
+                              block_q=bq, block_k=bk, n_buckets=nb,
+                              hoist_scale=hoist_scale, fuse_bias=fuse_bias),
             grid_spec=pltpu.PrefetchScalarGridSpec(
                 num_scalar_prefetch=1, grid=(B, H, nq, mb),
                 in_specs=qkv_do_specs + [bkt_spec, bias_spec],
@@ -346,7 +382,8 @@ def _cluster_bwd(q, k, v, g, out, lse, block_idx, buckets, bias_table,
         _ca._PALLAS_CALLS[0] += 1
         dqt = pl.pallas_call(
             functools.partial(_dq_kernel, sm_scale=sm_scale, causal=causal,
-                              block_q=bq, block_k=bk),
+                              block_q=bq, block_k=bk,
+                              hoist_scale=hoist_scale),
             grid_spec=pltpu.PrefetchScalarGridSpec(
                 num_scalar_prefetch=1, grid=(B, H, nq, mb),
                 in_specs=qkv_do_specs,
@@ -399,16 +436,18 @@ def _cluster_bwd(q, k, v, g, out, lse, block_idx, buckets, bias_table,
                 lambda b, h, ki, ti, idxt: (
                     jnp.maximum(idxt[b, ki, ti, 0], 0),
                     jnp.maximum(idxt[b, ki, ti, 1], 0), 0, 0))
-        bias_t_spec = pl.BlockSpec((H, bias_table.shape[1]),
+        bias_t_spec = pl.BlockSpec((H, nb_op),
                                    lambda b, h, ki, ti, idxt: (0, 0))
         kernel = functools.partial(_dkv_kernel_biased, sm_scale=sm_scale,
-                                   block_q=bq, block_k=bk)
+                                   block_q=bq, block_k=bk,
+                                   hoist_scale=hoist_scale,
+                                   fuse_bias=fuse_bias)
         in_specs = dkv_in_specs + [bkt_t_spec, bias_t_spec]
-        args = (idxt, qt, kt, vt, gt, lse, delta, buckets,
-                bias_table.astype(F32))
+        args = (idxt, qt, kt, vt, gt, lse, delta, buckets, bias_op)
     else:
         kernel = functools.partial(_dkv_kernel, sm_scale=sm_scale,
-                                   causal=causal, block_q=bq, block_k=bk)
+                                   causal=causal, block_q=bq, block_k=bk,
+                                   hoist_scale=hoist_scale)
         in_specs = dkv_in_specs
         args = (idxt, qt, kt, vt, gt, lse, delta)
 
@@ -438,24 +477,28 @@ def _cluster_bwd(q, k, v, g, out, lse, block_idx, buckets, bias_table,
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _cluster_vjp(meta, q, k, v, block_idx, buckets, bias_table,
                  block_idx_t):
-    causal, interpret = meta
+    causal, interpret, hoist_scale, fuse_bias = meta
     return _ca.cluster_attention(q, k, v, block_idx, buckets, bias_table,
-                                 causal=causal, interpret=interpret)
+                                 causal=causal, interpret=interpret,
+                                 hoist_scale=hoist_scale,
+                                 fuse_bias=fuse_bias)
 
 
 def _cluster_vjp_fwd(meta, q, k, v, block_idx, buckets, bias_table,
                      block_idx_t):
-    causal, interpret = meta
+    causal, interpret, hoist_scale, fuse_bias = meta
     out, lse = _ca.cluster_attention(q, k, v, block_idx, buckets,
                                      bias_table, causal=causal,
                                      interpret=interpret,
-                                     return_residuals=True)
+                                     return_residuals=True,
+                                     hoist_scale=hoist_scale,
+                                     fuse_bias=fuse_bias)
     return out, (q, k, v, block_idx, buckets, bias_table, block_idx_t,
                  out, lse)
 
 
 def _cluster_vjp_bwd(meta, res, g):
-    causal, interpret = meta
+    causal, interpret, hoist_scale, fuse_bias = meta
     q, k, v, block_idx, buckets, bias_table, block_idx_t, out, lse = res
     with_bias = buckets is not None
     had_table = bias_table is not None
@@ -463,7 +506,8 @@ def _cluster_vjp_bwd(meta, res, g):
         bias_table = jnp.zeros((q.shape[2], 1), F32)
     dq, dk, dv, dbias = _cluster_bwd(
         q, k, v, g, out, lse, block_idx, buckets, bias_table, block_idx_t,
-        causal=causal, interpret=interpret, with_bias=with_bias)
+        causal=causal, interpret=interpret, with_bias=with_bias,
+        hoist_scale=hoist_scale, fuse_bias=fuse_bias and with_bias)
     return dq, dk, dv, None, None, (dbias if had_table else None), None
 
 
@@ -472,12 +516,18 @@ _cluster_vjp.defvjp(_cluster_vjp_fwd, _cluster_vjp_bwd)
 
 def cluster_attention_vjp(q, k, v, block_idx, buckets=None, bias_table=None,
                           block_idx_t=None, *, causal: bool = False,
-                          interpret: bool = False):
+                          interpret: bool = False,
+                          hoist_scale: bool = False,
+                          fuse_bias: bool = False):
     """Differentiable cluster-sparse attention: the forward kernel of
     ``kernels/cluster_attention.py`` with the recomputation backward above
     (dQ over the forward layout, dK/dV over the transposed one, bucketed
     ``bias_table`` gradient). This is what the dispatch layer
     (``kernels/ops.py``) routes kernel-mode calls through, which makes
-    ``--attn-impl compiled|interpret`` a *training*-path setting."""
-    return _cluster_vjp((causal, interpret), q, k, v, block_idx, buckets,
-                        bias_table, block_idx_t)
+    ``--attn-impl compiled|interpret`` a *training*-path setting.
+    ``hoist_scale``/``fuse_bias`` are the autotuner's dataflow rewrites —
+    applied identically in the forward and the recomputation backward."""
+    return _cluster_vjp((causal, interpret, hoist_scale,
+                         fuse_bias and buckets is not None),
+                        q, k, v, block_idx, buckets, bias_table,
+                        block_idx_t)

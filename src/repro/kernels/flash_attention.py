@@ -33,7 +33,7 @@ from repro.kernels.policy import F32, NEG_INF
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
                   sm_scale: float, causal: bool, block_q: int, block_k: int,
-                  seq_k: int):
+                  seq_k: int, hoist_scale: bool = False):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -52,9 +52,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
     @pl.when(run)
     def _compute():
         q = q_ref[0].astype(F32)                 # (bq, d)
+        if hoist_scale:   # scale the (bq, d) q tile, not every score
+            q = q * sm_scale
         k = k_ref[0].astype(F32)                 # (bk, d)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32) * sm_scale
+                                preferred_element_type=F32)
+        if not hoist_scale:
+            s = s * sm_scale
         kpos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
         mask = kpos < seq_k
@@ -106,13 +110,21 @@ def _collapse(q, k, v, sq_p, sk_p):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "block_q", "block_k", "interpret", "return_residuals"))
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False,
-                    return_residuals: bool = False):
+    "causal", "block_q", "block_k", "interpret", "return_residuals",
+    "hoist_scale"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int,
+                    block_k: int, interpret: bool = False,
+                    return_residuals: bool = False,
+                    hoist_scale: bool = False):
     """q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh). Returns (B, Sq, H, Dh);
     with ``return_residuals=True`` also the per-row logsumexp
-    ``(B*H, Sq_padded)`` f32 for the recomputation backward."""
+    ``(B*H, Sq_padded)`` f32 for the recomputation backward.
+
+    ``block_q``/``block_k`` are REQUIRED: the block-size constants live
+    in ``repro.tune.schedule.DEFAULT_SCHEDULES`` (winner tables override
+    them per shape bucket) and the dispatch layer resolves them — lint
+    rule REP007 keeps literals out of this package. ``hoist_scale`` is
+    the autotuner's scale-onto-Q dataflow rewrite (same math)."""
     B, Sq, H, Dh, Sk, KV, G, bq, bk, nq, nk = _shapes(q, k, block_q,
                                                       block_k)
     sm_scale = Dh ** -0.5
@@ -124,7 +136,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
 
     kernel = functools.partial(_flash_kernel, sm_scale=sm_scale,
                                causal=causal, block_q=bq, block_k=bk,
-                               seq_k=Sk)
+                               seq_k=Sk, hoist_scale=hoist_scale)
     # the residual output only exists on the training path — forward-only
     # calls don't pay the (B*H, Sq) f32 write
     out_specs = [pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0))]
@@ -161,7 +173,8 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
 # --------------------------------------------------- recomputation bwd
 
 def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref,
-                     acc_s, *, sm_scale, causal, block_q, block_k, seq_k):
+                     acc_s, *, sm_scale, causal, block_q, block_k, seq_k,
+                     hoist_scale=False):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -176,8 +189,16 @@ def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref,
     def _compute():
         q = q_ref[0].astype(F32)
         k = k_ref[0].astype(F32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32) * sm_scale
+        # recompute scores EXACTLY as the forward built them (the lse
+        # residual bakes in the forward's op order); q itself stays
+        # unscaled — the dq/dk chain-rule factor is applied explicitly
+        if hoist_scale:
+            s = jax.lax.dot_general(q * sm_scale, k,
+                                    (((1,), (1,)), ((), ())),
+                                    preferred_element_type=F32)
+        else:
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=F32) * sm_scale
         kpos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
         mask = kpos < seq_k
@@ -202,7 +223,7 @@ def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref,
 
 def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref,
                       dv_ref, dk_s, dv_s, *, sm_scale, causal, block_q,
-                      block_k, seq_k):
+                      block_k, seq_k, hoist_scale=False):
     ki = pl.program_id(1)
     qi = pl.program_id(2)
     nq = pl.num_programs(2)
@@ -218,8 +239,16 @@ def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref,
     def _compute():
         q = q_ref[0].astype(F32)
         k = k_ref[0].astype(F32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32) * sm_scale
+        # same recompute-as-forward rule as the dQ kernel; dk below
+        # contracts ds against the UNSCALED q (the sm_scale factor is
+        # explicit — a scaled q here would double to sm_scale**2)
+        if hoist_scale:
+            s = jax.lax.dot_general(q * sm_scale, k,
+                                    (((1,), (1,)), ((), ())),
+                                    preferred_element_type=F32)
+        else:
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=F32) * sm_scale
         kpos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
         mask = kpos < seq_k
@@ -246,9 +275,9 @@ def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                             "interpret"))
+                                             "interpret", "hoist_scale"))
 def _flash_bwd(q, k, v, g, out, lse, *, causal, block_q, block_k,
-               interpret):
+               interpret, hoist_scale=False):
     B, Sq, H, Dh, Sk, KV, G, bq, bk, nq, nk = _shapes(q, k, block_q,
                                                       block_k)
     sm_scale = Dh ** -0.5
@@ -266,7 +295,8 @@ def _flash_bwd(q, k, v, g, out, lse, *, causal, block_q, block_k,
 
     dqt = pl.pallas_call(
         functools.partial(_flash_dq_kernel, sm_scale=sm_scale,
-                          causal=causal, block_q=bq, block_k=bk, seq_k=Sk),
+                          causal=causal, block_q=bq, block_k=bk, seq_k=Sk,
+                          hoist_scale=hoist_scale),
         grid=(B * H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
@@ -287,7 +317,8 @@ def _flash_bwd(q, k, v, g, out, lse, *, causal, block_q, block_k,
 
     dkt, dvt = pl.pallas_call(
         functools.partial(_flash_dkv_kernel, sm_scale=sm_scale,
-                          causal=causal, block_q=bq, block_k=bk, seq_k=Sk),
+                          causal=causal, block_q=bq, block_k=bk, seq_k=Sk,
+                          hoist_scale=hoist_scale),
         grid=(B * H, nk, nq),
         in_specs=[
             pl.BlockSpec((1, bq, Dh), lambda bh, ki, qi: (bh, qi, 0)),
@@ -318,31 +349,38 @@ def _flash_bwd(q, k, v, g, out, lse, *, causal, block_q, block_k,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _flash_vjp(meta, q, k, v):
-    causal, block_q, block_k, interpret = meta
+    causal, block_q, block_k, interpret, hoist_scale = meta
     return flash_attention(q, k, v, causal=causal, block_q=block_q,
-                           block_k=block_k, interpret=interpret)
+                           block_k=block_k, interpret=interpret,
+                           hoist_scale=hoist_scale)
 
 
 def _flash_vjp_fwd(meta, q, k, v):
-    causal, block_q, block_k, interpret = meta
+    causal, block_q, block_k, interpret, hoist_scale = meta
     out, lse = flash_attention(q, k, v, causal=causal, block_q=block_q,
                                block_k=block_k, interpret=interpret,
-                               return_residuals=True)
+                               return_residuals=True,
+                               hoist_scale=hoist_scale)
     return out, (q, k, v, out, lse)
 
 
 def _flash_vjp_bwd(meta, res, g):
-    causal, block_q, block_k, interpret = meta
+    causal, block_q, block_k, interpret, hoist_scale = meta
     q, k, v, out, lse = res
     return _flash_bwd(q, k, v, g, out, lse, causal=causal, block_q=block_q,
-                      block_k=block_k, interpret=interpret)
+                      block_k=block_k, interpret=interpret,
+                      hoist_scale=hoist_scale)
 
 
 _flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 
-def flash_attention_vjp(q, k, v, *, causal: bool = True, block_q: int = 128,
-                        block_k: int = 128, interpret: bool = False):
+def flash_attention_vjp(q, k, v, *, causal: bool = True, block_q: int,
+                        block_k: int, interpret: bool = False,
+                        hoist_scale: bool = False):
     """Differentiable flash attention: identical forward, FlashAttention
-    recomputation backward (dQ + transposed-grid dK/dV kernels above)."""
-    return _flash_vjp((causal, block_q, block_k, interpret), q, k, v)
+    recomputation backward (dQ + transposed-grid dK/dV kernels above).
+    Block sizes are required — the dispatch layer resolves them from the
+    winner table / ``DEFAULT_SCHEDULES`` (REP007)."""
+    return _flash_vjp((causal, block_q, block_k, interpret, hoist_scale),
+                      q, k, v)

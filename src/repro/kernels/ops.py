@@ -85,11 +85,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dual_attention import cluster_sparse_attention
+from repro.kernels import cluster_attention as _ca
 from repro.kernels import cluster_attention_bwd as _cab
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import ssd as _ssd
 from repro.kernels.policy import F32
+
+# re-exported for the autotuner: the forward launch contract lives in ONE
+# place (kernels/cluster_attention.grid_triple) and the dispatch layer is
+# the kernels package's public surface — REP002 keeps everything outside
+# repro/kernels/ off the kernel modules themselves
+grid_triple = _ca.grid_triple
 
 MODES = ("auto", "ref", "interpret", "compiled")
 OPS = ("flash_attention", "cluster_attention", "ssd", "paged_attention")
@@ -171,17 +178,78 @@ def _nonfloat(q, k, v) -> str | None:
     return None
 
 
+# ------------------------------------------------- trace-time memo tables
+#
+# Dispatch decisions are host-side and happen once per TRACE, but eager
+# interpret-mode loops re-enter dispatch per call — both memos keep the
+# hot path allocation-free (no fresh tuple/string/float objects per call).
+
+# (op, seq_len, heads, d_head, dtype, tune-generation) -> Schedule. The
+# generation component makes a winner-table refresh() invalidate every
+# entry without touching jit caches (see repro.tune.runtime).
+_SCHED_MEMO: dict = {}
+
+# (d_head, dtype) -> (pad, pre-scale): the lane-padding decision per
+# head-dim/dtype, computed once
+_PAD_MEMO: dict = {}
+
+
+def resolve_schedule(op: str, *, seq_len: int, heads: int | None = None,
+                     d_head: int | None = None, dtype="float32"):
+    """The effective :class:`repro.tune.schedule.Schedule` for this
+    op/shape right now: winner table first (warn-and-fallback on any
+    miss/stale/corrupt state — never raises), ``DEFAULT_SCHEDULES``
+    otherwise. Memoized per shape signature and tune generation, so a
+    mid-training table refresh changes what FUTURE traces resolve while
+    existing jitted programs keep their baked-in schedule."""
+    from repro.tune import runtime as _tune_rt
+    key = (op, int(seq_len), heads, d_head, str(dtype),
+           _tune_rt.generation())
+    sched = _SCHED_MEMO.get(key)
+    if sched is None:
+        from repro.tune.schedule import shape_bucket
+        if len(_SCHED_MEMO) > 4096:   # stale generations never hit again
+            _SCHED_MEMO.clear()
+        bucket = shape_bucket(op, seq_len=seq_len, heads=heads,
+                              d_head=d_head, dtype=dtype)
+        sched = _tune_rt.lookup(op, bucket)
+        _SCHED_MEMO[key] = sched
+    return sched
+
+
+def _sched_field(sched, name: str):
+    """A schedule field with the op-default as backstop (a hand-written
+    table entry may omit fields; dispatch must still resolve)."""
+    val = getattr(sched, name)
+    if val is None:
+        from repro.tune.schedule import DEFAULT_SCHEDULES
+        val = getattr(DEFAULT_SCHEDULES[sched.op], name)
+    return val
+
+
+def _pad_plan(dh: int, dtype) -> tuple:
+    key = (int(dh), str(dtype))
+    plan = _PAD_MEMO.get(key)
+    if plan is None:
+        pad = -dh % LANE
+        scale = float(((dh + pad) / dh) ** 0.5) if pad else 1.0
+        plan = (pad, scale)
+        _PAD_MEMO[key] = plan
+    return plan
+
+
 def _pad_lanes(q, k, v):
     """Zero-pad the head (lane) dim of q/k/v up to a multiple of LANE and
     return an un-pad function for the output. The kernels derive their
     softmax scale from the padded Dh, so q is pre-scaled by
     ``sqrt(Dh_padded / Dh)`` to keep the effective scale at ``Dh**-0.5``;
-    zero lanes contribute nothing to q.k or to the sliced-off output."""
+    zero lanes contribute nothing to q.k or to the sliced-off output.
+    The (pad, scale) decision is memoized per (d_head, dtype)."""
     dh = q.shape[-1]
-    pad = -dh % LANE
+    pad, scale = _pad_plan(dh, q.dtype)
     if not pad:
         return q, k, v, lambda o: o
-    q = q * float(((dh + pad) / dh) ** 0.5)
+    q = q * scale
     width = ((0, 0),) * (q.ndim - 1) + ((0, pad),)
     return (jnp.pad(q, width), jnp.pad(k, width), jnp.pad(v, width),
             lambda o: o[..., :dh])
@@ -189,11 +257,17 @@ def _pad_lanes(q, k, v):
 
 # --------------------------------------------------------------- flash
 
-def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+def flash_attention(q, k, v, *, causal=True, block_q=None, block_k=None):
     """Dense flash attention. q ``(B, Sq, H, Dh)``, k/v ``(B, Sk, KV, Dh)``.
     The Pallas path pads ragged sequence tails and non-lane-aligned head
     dims itself and is differentiable (``flash_attention_vjp``); a missing
-    TPU or non-float inputs force the ref fallback."""
+    TPU or non-float inputs force the ref fallback.
+
+    ``block_q``/``block_k`` default to the autotuner's answer for this
+    shape bucket (winner table if one is installed, else
+    ``DEFAULT_SCHEDULES``); passing them explicitly overrides the tile
+    sizes while rewrite flags (``hoist_scale``) still come from the
+    resolved schedule."""
     mode = resolve_mode("flash_attention")
     reason = _no_tpu(mode)
     if reason is None and mode != "ref":
@@ -203,10 +277,18 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
         mode = "ref"
     if mode == "ref":
         return _ref.flash_attention_ref(q, k, v, causal=causal)
+    sched = resolve_schedule("flash_attention", seq_len=q.shape[1],
+                             heads=q.shape[2], d_head=q.shape[3],
+                             dtype=q.dtype)
+    if block_q is None:
+        block_q = _sched_field(sched, "block_q")
+    if block_k is None:
+        block_k = _sched_field(sched, "block_k")
     q, k, v, unpad = _pad_lanes(q, k, v)
     return unpad(_fa.flash_attention_vjp(q, k, v, causal=causal,
                                          block_q=block_q, block_k=block_k,
-                                         interpret=(mode == "interpret")))
+                                         interpret=(mode == "interpret"),
+                                         hoist_scale=sched.hoist_scale))
 
 
 # --------------------------------------------------------------- cluster
@@ -293,19 +375,21 @@ def _cluster_illegal(q, k, v, block_idx, buckets, causal, mode, want_bq,
 _GRID_AUDITED: set = set()
 
 
-def _grid_race_reason(q, k, block_idx, buckets, bias_table) -> str | None:
+def _grid_race_reason(q, k, block_idx, buckets, bias_table,
+                      fuse_bias=False) -> str | None:
     """Dispatch-time pallas grid audit (interpret/debug mode, or any
     mode under REPRO_IR_AUDIT): check the forward (grid, index_map,
     out_shape) triple — the exact one ``grid_triple`` hands to
     pallas_call — against the concrete scalar-prefetch stream. A traced
     ``block_idx`` cannot be audited statically (its gather targets are
-    data-dependent): skip, like the duplicate-row scan above. Returns a
-    fallback reason on error findings (never raises — dispatch policy)."""
+    data-dependent): skip, like the duplicate-row scan above.
+    ``fuse_bias`` widens the audited bias table by the sentinel column
+    the fused launch appends. Returns a fallback reason on error
+    findings (never raises — dispatch policy)."""
     if isinstance(block_idx, jax.core.Tracer):
         return None
     from repro.analysis.ir import errors as _ir_errors
     from repro.analysis.ir import pallas_check
-    from repro.kernels import cluster_attention as _ca
 
     B, S, H, Dh = q.shape
     KV = k.shape[2]
@@ -316,14 +400,16 @@ def _grid_race_reason(q, k, block_idx, buckets, bias_table) -> str | None:
     per_graph = arr.ndim == 3
     if not per_graph:
         arr = np.broadcast_to(arr[None], (B, nq, mb))
-    n_buckets = bias_table.shape[1] if buckets is not None else None
+    n_buckets = None
+    if buckets is not None:
+        n_buckets = bias_table.shape[1] + (1 if fuse_bias else 0)
     key = (B, S, H, KV, Dh, nq, mb, bk, per_graph, n_buckets,
            hash(arr.tobytes()))
     if key in _GRID_AUDITED:
         return None
-    triple = _ca.grid_triple(B, S, H, KV, Dh + (-Dh % LANE), nq, mb,
-                             bk=bk, per_graph=per_graph,
-                             n_buckets=n_buckets, return_residuals=True)
+    triple = grid_triple(B, S, H, KV, Dh + (-Dh % LANE), nq, mb,
+                         bk=bk, per_graph=per_graph,
+                         n_buckets=n_buckets, return_residuals=True)
     findings = pallas_check.audit_grid(
         triple["grid"], triple["in_specs"], triple["out_specs"],
         triple["in_shapes"], triple["out_shapes"],
@@ -352,13 +438,16 @@ def _cluster_ref(q, k, v, block_idx, buckets, bias_table, *, causal,
 
 
 def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None,
-                      block_idx_t=None, *, causal=False, row_chunk=8,
+                      block_idx_t=None, *, causal=False, row_chunk=None,
                       bq=None, bk=None):
     """Cluster-sparse attention over a reformation layout — the production
     ``attn_fn`` of ``parallel/cluster_parallel.py`` (shape contract in the
     module docstring). ``bq``/``bk`` are only needed when they cannot be
     implied (``bq = S // nq``, ``bk`` from buckets); ``row_chunk`` tunes
-    the ref path's q-row chunking and is ignored by the kernel.
+    the ref path's q-row chunking (ignored by the kernel) and defaults to
+    the autotuner's answer for this shape bucket, as do the schedule
+    rewrite flags (``hoist_scale``/``fuse_bias``) applied on the kernel
+    path.
 
     The kernel path is differentiable end-to-end (``custom_vjp`` with
     FlashAttention-style recomputation — kernels/cluster_attention_bwd);
@@ -366,6 +455,11 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None,
     (derived in-trace at the dense bound when omitted; the ref path never
     needs it). Per-graph (3-D) layouts run as ONE batched pallas_call."""
     mode = resolve_mode("cluster_attention")
+    sched = resolve_schedule("cluster_attention", seq_len=q.shape[1],
+                             heads=q.shape[2], d_head=q.shape[3],
+                             dtype=q.dtype)
+    if row_chunk is None:
+        row_chunk = _sched_field(sched, "row_chunk")
     if mode != "ref":
         reason = _cluster_illegal(q, k, v, block_idx, buckets, causal,
                                   mode, bq, bk, block_idx_t)
@@ -377,12 +471,14 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None,
                             causal=causal, row_chunk=row_chunk, bq=bq, bk=bk)
 
     interpret = mode == "interpret"
+    fuse_bias = sched.fuse_bias and buckets is not None
     block_idx = block_idx.astype(jnp.int32)
     if buckets is not None and bias_table is None:
         # zero bias; 1-wide table (bucket lookups clamp to row 0)
         bias_table = jnp.zeros((q.shape[2], 1), F32)
     if interpret or os.environ.get("REPRO_IR_AUDIT", ""):
-        reason = _grid_race_reason(q, k, block_idx, buckets, bias_table)
+        reason = _grid_race_reason(q, k, block_idx, buckets, bias_table,
+                                   fuse_bias=fuse_bias)
         if reason is not None:
             _fallback("cluster_attention", reason)
             return _cluster_ref(q, k, v, block_idx, buckets, bias_table,
@@ -391,7 +487,8 @@ def cluster_attention(q, k, v, block_idx, buckets=None, bias_table=None,
     q, k, v, unpad = _pad_lanes(q, k, v)
     return unpad(_cab.cluster_attention_vjp(
         q, k, v, block_idx, buckets, bias_table, block_idx_t,
-        causal=causal, interpret=interpret))
+        causal=causal, interpret=interpret,
+        hoist_scale=sched.hoist_scale, fuse_bias=fuse_bias))
 
 
 # --------------------------------------------------------------- paged
@@ -421,9 +518,16 @@ def paged_attention(q, k_pool, v_pool, block_tables, cache_len, *,
 
 # --------------------------------------------------------------- ssd
 
-def ssd(x, dt, a, b, c, *, chunk=256):
-    """Mamba2 SSD chunked scan. Falls back to ref when the sequence is not
+def ssd(x, dt, a, b, c, *, chunk=None):
+    """Mamba2 SSD chunked scan. ``chunk`` defaults to the autotuner's
+    answer for this shape bucket (winner table first, else
+    ``DEFAULT_SCHEDULES``). Falls back to ref when the sequence is not
     tiled by ``chunk`` or no TPU is attached for ``compiled``."""
+    if chunk is None:
+        sched = resolve_schedule("ssd", seq_len=x.shape[1],
+                                 heads=x.shape[2], d_head=x.shape[3],
+                                 dtype=x.dtype)
+        chunk = _sched_field(sched, "chunk")
     mode = resolve_mode("ssd")
     reason = _no_tpu(mode)
     if reason is None and mode != "ref" and x.shape[1] % chunk:

@@ -76,9 +76,13 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x, dt, a, b, c, *, chunk: int = 256, interpret: bool = False):
+def ssd(x, dt, a, b, c, *, chunk: int, interpret: bool = False):
     """x (B,S,H,dh); dt (B,S,H); a (H,); b,c (B,S,N).
-    Returns (y (B,S,H,dh), final_state (B,H,dh,N))."""
+    Returns (y (B,S,H,dh), final_state (B,H,dh,N)).
+    ``chunk`` is REQUIRED — the constant lives in
+    ``repro.tune.schedule.DEFAULT_SCHEDULES`` and the dispatch layer
+    resolves it (winner table first); lint rule REP007 keeps block-size
+    literals out of this package."""
     B, S, H, dh = x.shape
     N = b.shape[-1]
     Q = min(chunk, S)

@@ -79,6 +79,12 @@ def main(argv=None):
                     help="[graph archs] steps per AutoTuner epoch / "
                          "re-layout boundary (-1 = config default, "
                          "0 = frozen layout)")
+    ap.add_argument("--retune-every", type=int, default=0,
+                    help="reload the kernel-autotune winner table every "
+                         "k steps (0 = never; repro.tune)")
+    ap.add_argument("--tune-table", default="",
+                    help="winner-table path for --retune-every "
+                         "('' = REPRO_TUNE_TABLE / TUNE_winners.json)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -104,7 +110,9 @@ def main(argv=None):
                        ckpt_dir=args.ckpt_dir, lr=args.lr,
                        warmup=max(2, args.steps // 10),
                        state_dtype=args.state_dtype,
-                       attn_impl=args.attn_impl)
+                       attn_impl=args.attn_impl,
+                       retune_every=args.retune_every,
+                       tune_table=args.tune_table)
     trainer = Trainer(model, tc, lambda s: lm_batch(dc, s),
                       mesh=mesh, recipe=recipe)
     from repro.kernels.ops import dispatch_table
@@ -178,7 +186,9 @@ def _graph_main(args, cfg, model):
                        state_dtype=args.state_dtype,
                        attn_impl=args.attn_impl,
                        interleave_period=interleave,
-                       elastic_every=elastic_every)
+                       elastic_every=elastic_every,
+                       retune_every=args.retune_every,
+                       tune_table=args.tune_table)
     trainer = Trainer(model, tc, task=task, mesh=mesh, recipe=recipe)
     state, status = trainer.run()
     if not trainer.history:  # restored a finished run: nothing to do

@@ -85,6 +85,13 @@ class TrainerConfig:
     # all-gather under a mesh) + dtype flow; error findings abort the run
     # pre-launch. REPRO_IR_AUDIT=1 turns it on too (env wins when set).
     ir_audit: bool = False
+    # kernel autotuning (repro.tune): reload the winner table from disk
+    # every k steps (0 = never). A refresh NEVER retraces the jitted
+    # steps — schedules resolve at trace time, so the two step programs
+    # survive the swap and refreshed winners apply to traces made after
+    # it (an elastic re-layout, a new loss variant).
+    retune_every: int = 0
+    tune_table: str = ""         # "" = REPRO_TUNE_TABLE / TUNE_winners.json
     # crash rescue: refresh an undonated host copy of the state every k
     # steps so the crash-consistent save survives donated-buffer deletion
     # when the jitted step itself dies mid-call (0 = off). Each refresh is
@@ -334,6 +341,13 @@ class Trainer:
                             task.on_epoch(float(np.mean(epoch_losses)),
                                           epoch_seconds, step=step + 1)
                         epoch_losses, epoch_seconds = [], 0.0
+                if cfg.retune_every > 0 and \
+                        (step + 1) % cfg.retune_every == 0:
+                    # winner-table refresh (see TrainerConfig.retune_every):
+                    # warn-and-fallback on any load problem, never raises,
+                    # never retraces the live step executables
+                    from repro.tune import runtime as tune_runtime
+                    tune_runtime.refresh(cfg.tune_table or None)
                 if (step + 1) % cfg.ckpt_every == 0:
                     self.ckpt.save(step + 1, state,
                                    extra=self._ckpt_extra())

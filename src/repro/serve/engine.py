@@ -73,7 +73,8 @@ class ServeEngine:
     """
 
     def __init__(self, model, params, *, batch_slots: int = 4,
-                 page: int = 16, max_len: int = 256, chunk: int = 32,
+                 page: int = 16, max_len: int = 256,
+                 chunk: int | None = None,
                  num_blocks: int | None = None, sparse: bool = False,
                  mesh_model: int = 1, eos: int | None = None,
                  ir_audit: bool = False):
@@ -88,6 +89,15 @@ class ServeEngine:
         self.B = int(batch_slots)
         self.page = int(page)
         self.max_len = int(max_len)
+        if chunk is None:
+            # prefill chunking is a tuned schedule ("paged_attention"
+            # winner-table entries; DEFAULT_SCHEDULES backstop) — an
+            # explicit chunk argument always wins
+            from repro.kernels import ops as kops
+            sched = kops.resolve_schedule(
+                "paged_attention", seq_len=self.max_len,
+                heads=self.cfg.n_heads, d_head=self.cfg.head_dim)
+            chunk = kops._sched_field(sched, "chunk")
         self.chunk = int(chunk)
         self.sparse = bool(sparse)
         self.eos = eos

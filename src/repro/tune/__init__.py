@@ -1,0 +1,25 @@
+"""Kernel autotuning: schedule search, persistent winner tables, and the
+runtime state the dispatch layer consults (``kernels/ops.py`` resolves
+block sizes and dataflow-rewrite flags here at trace time).
+
+Light by design: importing ``repro.tune`` pulls in only the schedule
+contract, the table codec, and the runtime state — the search, the
+canonical cases, and the timing harness live behind
+``repro.tune.search`` / ``repro.tune.cases`` / ``repro.tune.timing``
+and the ``python -m repro.tune`` CLI, so dispatch never pays their
+import cost."""
+
+from repro.tune.runtime import (DEFAULT_TABLE_PATH, ENV_ENABLE, ENV_TABLE,
+                                active_table, enabled, generation, lookup,
+                                refresh, reset, set_table, table_path,
+                                use_table)
+from repro.tune.schedule import (DEFAULT_SCHEDULES, SCHEDULE_CACHE_VERSION,
+                                 Schedule, enumerate_schedules, shape_bucket)
+from repro.tune.table import WinnerTable
+
+__all__ = [
+    "DEFAULT_SCHEDULES", "DEFAULT_TABLE_PATH", "ENV_ENABLE", "ENV_TABLE",
+    "SCHEDULE_CACHE_VERSION", "Schedule", "WinnerTable", "active_table",
+    "enabled", "enumerate_schedules", "generation", "lookup", "refresh",
+    "reset", "set_table", "shape_bucket", "table_path", "use_table",
+]

@@ -1,0 +1,68 @@
+"""Autotune CLI — search schedules, persist the winner table, record the
+BENCH_autotune.json trajectory, optionally wall-clock-check the winner.
+
+  PYTHONPATH=src python -m repro.tune --offline            # CI smoke
+  PYTHONPATH=src python -m repro.tune --ops cluster_attention,ssd
+  PYTHONPATH=src python -m repro.tune --offline --check 1.2
+
+``--offline`` scores candidates with the deterministic cost model (same
+winners on every run — the CPU/CI mode); without it every candidate is
+wall-clock timed through real dispatch. ``--check R`` additionally
+wall-clock-times the tuned cluster-attention schedule against the
+hard-coded default on the tier-1 bench case and exits 1 if it exceeds
+``R``× — the CI regression gate, and deliberately a real timing even
+after an offline search. Artifacts: ``TUNE_winners.json`` (what dispatch
+loads, gitignored, uploaded by CI) and ``BENCH_autotune.json`` (records
+per ``repro.tune.search.AUTOTUNE_SCHEMA``, schema in
+docs/benchmarks.md)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.tune.runtime import DEFAULT_TABLE_PATH
+from repro.tune.search import (AUTOTUNE_SCHEMA, TUNABLE_OPS, check_regression,
+                               tune_all)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--offline", action="store_true",
+                    help="deterministic cost-model scoring (CI / CPU mode)")
+    ap.add_argument("--ops", default=None,
+                    help=f"comma-separated subset of {','.join(TUNABLE_OPS)}")
+    ap.add_argument("--out-table", default=DEFAULT_TABLE_PATH,
+                    help="winner-table path (what dispatch loads)")
+    ap.add_argument("--bench-json", default="BENCH_autotune.json",
+                    help="where to write the autotune bench records")
+    ap.add_argument("--check", type=float, default=None, metavar="RATIO",
+                    help="wall-clock the tuned cluster schedule vs the "
+                         "default; exit 1 beyond RATIO x")
+    args = ap.parse_args(argv)
+
+    ops = tuple(s for s in (args.ops or "").split(",") if s) or None
+    for op in ops or ():
+        if op not in TUNABLE_OPS:
+            ap.error(f"unknown op {op!r} (choose from {TUNABLE_OPS})")
+
+    table, records = tune_all(ops, offline=args.offline, log=print)
+    table.save(args.out_table)
+    print(f"# wrote {args.out_table} ({len(table.entries)} entries)",
+          flush=True)
+
+    payload = {"schema": list(AUTOTUNE_SCHEMA), "records": records}
+    ok = True
+    if args.check is not None:
+        result = check_regression(table, threshold=args.check, log=print)
+        payload["check"] = result
+        ok = result["ok"]
+    with open(args.bench_json, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"# wrote {args.bench_json} ({len(records)} records)", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""Canonical tuning/benchmark cases, one per op.
+
+``cluster_grad_case`` is the shared rig the fwd-vs-fwd+bwd kernel
+benchmarks already used (``benchmarks/run.py`` bench JSON and
+``attention_breakdown --grad``); it moved here so the tuner times the
+EXACT case the tier-1 bench trajectory records — ``benchmarks/common``
+re-exports it for back-compat. Every case dict carries the shape fields
+``enumerate_schedules`` buckets on (``seq_len``, ``heads``, ``d_head``)
+plus ``fns(mode)`` building FRESH jitted forward / value_and_grad
+closures per dispatch mode (dispatch resolves at trace time, so a
+cached executable would silently keep the previous mode — and the
+previous winner table).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cluster_grad_case(n_nodes: int, *, bq: int = 64, d_b: int = 8,
+                      heads: int = 4, d_head: int = 32, seed: int = 0):
+    """One SBM graph layout + jitted forward-only and value_and_grad
+    closures over ops.cluster_attention, per dispatch mode."""
+    from repro.core.graph import sbm_graph
+    from repro.core.reformation import build_layout
+    from repro.kernels import ops as kops
+
+    g = sbm_graph(n_nodes, 4, p_in=min(0.5, 40.0 / n_nodes),
+                  p_out=1.0 / n_nodes, seed=seed)
+    lay = build_layout(g, bq=bq, bk=bq, k_clusters=4, d_b=d_b, n_global=1)
+    S = lay.seq_len
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, S, heads, d_head))
+    bi = jnp.asarray(lay.block_idx)[None]
+    bu = jnp.asarray(lay.buckets)[None]
+    bit = jnp.asarray(lay.block_idx_t)[None]
+    bt = jax.random.normal(jax.random.fold_in(key, 1),
+                           (heads, lay.n_buckets)) * 0.2
+
+    def fns(mode: str):
+        """(forward-only, value_and_grad) jitted fresh under ``mode`` —
+        a fresh jit per mode, because dispatch resolves at trace time and
+        a cached executable would silently keep the previous mode."""
+        kops.set_mode(mode, "cluster_attention")
+
+        def loss(q, bt):
+            return kops.cluster_attention(q, q, q, bi, bu, bt, bit) \
+                .astype(jnp.float32).sum()
+
+        return (jax.jit(loss),
+                jax.jit(jax.value_and_grad(loss, argnums=(0, 1))))
+
+    return {"op": "cluster_attention", "lay": lay, "seq_len": S, "q": q,
+            "bt": bt, "fns": fns, "args": (q, bt), "B": 1, "heads": heads,
+            "d_head": d_head, "n_buckets": lay.n_buckets, "dtype": "float32"}
+
+
+def flash_case(seq_len: int = 256, *, heads: int = 4, d_head: int = 32,
+               seed: int = 0):
+    """Dense causal self-attention over ops.flash_attention."""
+    from repro.kernels import ops as kops
+
+    q = jax.random.normal(jax.random.PRNGKey(seed),
+                          (1, seq_len, heads, d_head))
+
+    def fns(mode: str, schedule=None):
+        kops.set_mode(mode, "flash_attention")
+        kw = {}
+        if schedule is not None:
+            kw = {"block_q": schedule.block_q, "block_k": schedule.block_k}
+
+        def loss(q):
+            return kops.flash_attention(q, q, q, causal=True, **kw) \
+                .astype(jnp.float32).sum()
+
+        return jax.jit(loss), jax.jit(jax.value_and_grad(loss))
+
+    return {"op": "flash_attention", "seq_len": seq_len, "q": q,
+            "fns": fns, "args": (q,), "B": 1, "heads": heads,
+            "kv_heads": heads, "d_head": d_head, "dtype": "float32"}
+
+
+def ssd_case(seq_len: int = 256, *, heads: int = 2, d_head: int = 8,
+             n_state: int = 4, seed: int = 0):
+    """Mamba2 SSD chunked scan over ops.ssd."""
+    from repro.kernels import ops as kops
+
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    B = 1
+    x = jax.random.normal(ks[0], (B, seq_len, heads, d_head))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, seq_len, heads)) - 2)
+    a = -jnp.exp(jax.random.normal(ks[2], (heads,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, seq_len, n_state))
+    c = jax.random.normal(ks[4], (B, seq_len, n_state))
+
+    def fns(mode: str, schedule=None):
+        kops.set_mode(mode, "ssd")
+        kw = {"chunk": schedule.chunk} if schedule is not None else {}
+
+        def loss(x):
+            y, _ = kops.ssd(x, dt, a, b, c, **kw)
+            return y.astype(jnp.float32).sum()
+
+        # the SSD Pallas kernel is forward-only (no custom_vjp) — the
+        # tuner times and oracle-gates the forward alone
+        return jax.jit(loss), None
+
+    return {"op": "ssd", "seq_len": seq_len, "x": x, "fns": fns,
+            "args": (x,), "B": B, "heads": heads, "d_head": d_head,
+            "dtype": "float32"}
+
+
+def paged_case(max_len: int = 256, *, heads: int = 4, d_head: int = 32):
+    """Paged attention has no Pallas kernel — its ``chunk`` schedule is
+    the ServeEngine prefill chunking, a serving-loop parameter with no
+    effect on op math, so the case carries shapes only (the search scores
+    it with the offline cost model and skips the oracle gate)."""
+    return {"op": "paged_attention", "seq_len": max_len, "heads": heads,
+            "d_head": d_head, "fns": None, "args": (), "B": 1,
+            "dtype": "float32"}

@@ -1,0 +1,155 @@
+"""Process-global autotune state consulted by the dispatch layer.
+
+``kernels/ops.py`` calls :func:`lookup` at *trace* time (dispatch is
+host-side Python; jitted steps bake the resolved schedule into the
+traced program). Consequences this module is built around:
+
+* a mid-training :func:`refresh` can never retrace an already-jitted
+  step — the schedule is a constant inside the existing executable.
+  Exactly the two Trainer step programs survive a table swap
+  (``tests/test_tune.py`` asserts it with ``assert_max_traces``);
+  refreshed winners apply to programs traced *after* the refresh.
+* lookups must be cheap and allocation-free on the hot path: ops
+  memoizes per (op, shape signature, :func:`generation`), and a refresh
+  invalidates that memo simply by bumping the generation.
+
+Fallback policy (never raise, warn once per cause): missing / stale /
+corrupt table -> warn + ``DEFAULT_SCHEDULES``; loaded table without an
+entry for the bucket -> warn (once per bucket) + ``DEFAULT_SCHEDULES``.
+The one silent case: no table was ever configured (``REPRO_TUNE_TABLE``
+unset and nothing at the default path) — the fresh-checkout state.
+
+Env knobs: ``REPRO_TUNE=0`` disables table consultation entirely
+(defaults only, silent); ``REPRO_TUNE_TABLE=path`` overrides the table
+location (default ``TUNE_winners.json`` in the working directory).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import warnings
+
+from repro.tune.schedule import DEFAULT_SCHEDULES, Schedule
+from repro.tune.table import WinnerTable
+
+ENV_ENABLE = "REPRO_TUNE"
+ENV_TABLE = "REPRO_TUNE_TABLE"
+DEFAULT_TABLE_PATH = "TUNE_winners.json"
+
+_state: dict = {"table": None, "loaded": False, "generation": 0}
+_warned: set[str] = set()
+
+
+def enabled() -> bool:
+    """Winner-table consultation is on unless REPRO_TUNE is explicitly
+    disabled (``0`` / ``off`` / ``false``)."""
+    return os.environ.get(ENV_ENABLE, "").lower() not in ("0", "off",
+                                                          "false")
+
+
+def table_path() -> str:
+    return os.environ.get(ENV_TABLE, "") or DEFAULT_TABLE_PATH
+
+
+def generation() -> int:
+    """Bumped on every table swap — dispatch memo keys include it, so a
+    refresh invalidates memoized schedules without touching jit caches."""
+    return _state["generation"]
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(f"repro.tune: {msg}", RuntimeWarning, stacklevel=3)
+
+
+def active_table() -> WinnerTable | None:
+    """The loaded winner table, loading lazily on first use. Missing /
+    stale / corrupt tables warn once and resolve to None (defaults) —
+    except the fresh-checkout normal state (no ``REPRO_TUNE_TABLE`` set
+    and nothing at the default path), which is silent: nobody asked for
+    a table, so its absence is not an anomaly."""
+    if not enabled():
+        return None
+    if not _state["loaded"]:
+        path = table_path()
+        table, reason = WinnerTable.load(path)
+        _state["table"] = table
+        _state["loaded"] = True
+        if reason is not None and (os.environ.get(ENV_TABLE, "")
+                                   or os.path.exists(path)):
+            _warn_once("load", f"{reason} — dispatch uses the built-in "
+                               f"DEFAULT_SCHEDULES")
+    return _state["table"]
+
+
+def lookup(op: str, bucket: str) -> Schedule:
+    """Winner schedule for ``bucket``, falling back to the op default.
+    Never raises; a loaded table with no matching entry warns once per
+    bucket."""
+    table = active_table()
+    if table is not None:
+        sched = table.lookup(bucket)
+        if sched is not None:
+            return sched
+        _warn_once(f"miss:{bucket}",
+                   f"winner table has no entry for {bucket} — using the "
+                   f"default {DEFAULT_SCHEDULES[op].describe()}")
+    return DEFAULT_SCHEDULES[op]
+
+
+def set_table(table: WinnerTable | None, *, path: str | None = None) -> None:
+    """Install an in-memory table (the tuner and tests use this; pass
+    None to return to pure defaults). Bumps the generation."""
+    _state["table"] = table
+    _state["loaded"] = True
+    _state["generation"] += 1
+    if path is not None:
+        os.environ[ENV_TABLE] = path
+    _warned.clear()
+
+
+@contextlib.contextmanager
+def use_table(table: WinnerTable | None):
+    """Temporarily install ``table`` (None = pure defaults, silent) and
+    restore the previous table state on exit — the search evaluates every
+    candidate through the real dispatch path with a one-entry table, and
+    tests pin winners without leaking into later tests. Both the install
+    and the restore bump the generation (dispatch memo invalidation)."""
+    prev_table, prev_loaded = _state["table"], _state["loaded"]
+    set_table(table)
+    try:
+        yield
+    finally:
+        _state["table"], _state["loaded"] = prev_table, prev_loaded
+        _state["generation"] += 1
+        _warned.clear()
+
+
+def refresh(path: str | None = None) -> bool:
+    """Reload the winner table from disk (the Trainer's epoch-boundary
+    retune hook and long-running servers call this). Never raises; on
+    any load problem the previous in-memory table is REPLACED by
+    defaults-only (warn once) — a refresh is a statement that the
+    on-disk table is the truth. Returns True iff a table was loaded.
+    Existing jitted programs are untouched (see module docstring)."""
+    table, reason = WinnerTable.load(path or table_path())
+    _state["table"] = table
+    _state["loaded"] = True
+    _state["generation"] += 1
+    _warned.clear()
+    if reason is not None:
+        _warn_once("load", f"{reason} — dispatch uses the built-in "
+                           f"DEFAULT_SCHEDULES")
+    return table is not None
+
+
+def reset() -> None:
+    """Test hook: forget any loaded table and warning state so the next
+    lookup reloads from the current env-resolved path."""
+    _state["table"] = None
+    _state["loaded"] = False
+    _state["generation"] += 1
+    _warned.clear()

@@ -1,0 +1,275 @@
+"""Schedule search: score legal candidates, gate winners on oracle
+equivalence, emit a winner table + BENCH_autotune records.
+
+Two scoring backends share one selection loop:
+
+wall-clock (``offline=False``)
+    Every candidate is timed through the REAL dispatch path — a one-entry
+    winner table is installed (``runtime.use_table``), the case re-jits
+    its forward / value_and_grad closures (schedules resolve at trace
+    time), and :func:`repro.tune.timing.time_candidate` AOT-compiles and
+    takes a trimmed mean. Forward and vjp backward are timed separately.
+
+offline (``offline=True``, the CI / CPU mode)
+    A deterministic cost model scores candidates — tile counts, padded
+    MXU work, per-grid-cell overhead, and the two dataflow rewrites
+    (``hoist_scale`` charges the scale once per q-tile instead of once
+    per (q, k) tile pair; ``fuse_bias`` drops the clip+where pair from
+    every biased tile). No timers, no machine noise: the same winner on
+    every run, which is what a CI artifact diff needs.
+
+Either way the selection loop walks candidates best-score-first and the
+FIRST one that passes the oracle-equivalence gate wins — a schedule
+enters the table only after its kernel-path forward AND gradients match
+the jnp reference on the case (the hard-coded default passes by
+definition: it IS current behavior). Candidates the enumerator pruned as
+grid-illegal were never scored at all.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.tune import cases as tune_cases
+from repro.tune import runtime, timing
+from repro.tune.schedule import (DEFAULT_SCHEDULES, Schedule,
+                                 enumerate_schedules, shape_bucket)
+from repro.tune.table import WinnerTable
+
+TUNABLE_OPS = ("cluster_attention", "flash_attention", "ssd",
+               "paged_attention")
+
+# the one schema of BENCH_autotune.json records (documented in
+# docs/benchmarks.md). In offline runs fwd_us/bwd_us carry cost-model
+# units, not microseconds — the ``source`` field says which.
+AUTOTUNE_SCHEMA = ("op", "bucket", "mode", "schedule", "source", "fwd_us",
+                   "bwd_us", "default_fwd_us", "default_bwd_us", "speedup")
+
+_TILE_OVERHEAD = 4096   # per-grid-cell cost: DMA setup + pipeline bubble
+_BWD_FACTOR = 2.5       # recompute backward ~ dq pass + dkv pass + fwd
+
+
+def kernel_mode() -> str:
+    """The dispatch mode whose timings the tuner cares about: the real
+    kernel on TPU, the Pallas interpreter elsewhere (kernel semantics —
+    ``ref`` would time a different program entirely)."""
+    return "compiled" if jax.default_backend() == "tpu" else "interpret"
+
+
+def default_case(op: str) -> dict:
+    """The canonical case per op. The cluster case is EXACTLY the tier-1
+    ``benchmarks/run.py`` bench-JSON case (S_target 256 → 244 nodes), so
+    the winner table speaks to the recorded perf trajectory."""
+    if op == "cluster_attention":
+        return tune_cases.cluster_grad_case(244, bq=32, heads=4, d_head=32)
+    if op == "flash_attention":
+        return tune_cases.flash_case(256, heads=4, d_head=32)
+    if op == "ssd":
+        return tune_cases.ssd_case(256)
+    if op == "paged_attention":
+        return tune_cases.paged_case(256)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def bucket_of(case: dict) -> str:
+    return shape_bucket(case["op"], seq_len=case["seq_len"],
+                        heads=case.get("heads"), d_head=case.get("d_head"),
+                        dtype=case.get("dtype", "float32"))
+
+
+def _candidate_table(case: dict, sched: Schedule) -> WinnerTable:
+    tbl = WinnerTable(backend=jax.default_backend())
+    tbl.put(bucket_of(case), sched, source="candidate")
+    return tbl
+
+
+def _trees_close(a, b, *, atol: float, rtol: float) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(np.asarray(x, np.float32),
+                           np.asarray(y, np.float32), atol=atol, rtol=rtol)
+               for x, y in zip(la, lb))
+
+
+def oracle_equivalent(case: dict, sched: Schedule, *, atol: float = 1e-4,
+                      rtol: float = 1e-4) -> bool:
+    """Gate: under ``sched``, the kernel-path forward and gradients must
+    match the jnp reference path on this case. Ops without a kernel
+    (paged attention — ``chunk`` is serving-loop batching, not op math)
+    pass trivially."""
+    if case.get("fns") is None:
+        return True
+    tbl = _candidate_table(case, sched)
+    try:
+        with runtime.use_table(tbl):
+            kf, kg = case["fns"](kernel_mode())
+            got = (kg or kf)(*case["args"])
+        with runtime.use_table(tbl):
+            rf, rg = case["fns"]("ref")
+            want = (rg or rf)(*case["args"])
+    finally:
+        kops.set_mode("auto", case["op"])
+    return _trees_close(got, want, atol=atol, rtol=rtol)
+
+
+def time_schedule(case: dict, sched: Schedule, mode: str, *,
+                  warmup: int = 2, iters: int = 5):
+    """(fwd_us, bwd_us) of the case under ``sched`` through real
+    dispatch: install a one-entry table, re-jit, AOT-compile, trimmed
+    mean. ``bwd_us`` is the full value_and_grad step (recompute backward
+    included), matching the BENCH_attention.json convention."""
+    with runtime.use_table(_candidate_table(case, sched)):
+        fwd, vg = case["fns"](mode)
+        fwd_us, _ = timing.time_candidate(lambda: fwd, *case["args"],
+                                          warmup=warmup, iters=iters)
+        bwd_us = 0.0
+        if vg is not None:   # forward-only kernels (ssd) time fwd alone
+            bwd_us, _ = timing.time_candidate(lambda: vg, *case["args"],
+                                              warmup=warmup, iters=iters)
+    return fwd_us, bwd_us
+
+
+# ------------------------------------------------------- offline cost model
+
+def _offline_cost(op: str, case: dict, s: Schedule) -> float:
+    """Deterministic per-candidate cost in abstract element-op units.
+    Charges padded tile work, a fixed per-grid-cell overhead, and the
+    rewrite savings; the absolute scale is meaningless — only the
+    ordering is consumed."""
+    S = case["seq_len"]
+    dh = case.get("d_head") or 64
+    dh_pad = dh + (-dh % 128)
+    B, H = case.get("B", 1), case.get("heads", 1)
+
+    if op == "flash_attention":
+        bq, bk = min(s.block_q, S), min(s.block_k, S)
+        nq, nk = -(-S // bq), -(-S // bk)
+        cells = B * H * nq * nk
+        work = cells * bq * bk * (2 * dh_pad + 8)
+        scale = (B * H * nq * bq * dh_pad if s.hoist_scale
+                 else cells * bq * bk)
+        return float(work + scale + cells * _TILE_OVERHEAD)
+
+    if op == "cluster_attention":
+        lay = case["lay"]
+        nq, mb = lay.block_idx.shape[-2:]
+        bq = S // nq
+        bk = lay.buckets.shape[-1] if lay.buckets is not None else bq
+        cells = B * H * nq * mb
+        work = cells * bq * bk * (2 * dh_pad + 8)
+        scale = (B * H * nq * bq * dh_pad if s.hoist_scale
+                 else cells * bq * bk)
+        # biased tile: clip + take + where-pair (3 elementwise sweeps)
+        # vs fused sentinel take + add (1)
+        bias = cells * bq * bk * (1 if s.fuse_bias else 3)
+        # ref-path q-row chunking: mild prior keeping the measured sweet
+        # spot (8) on ties — the kernel ignores row_chunk entirely
+        rc_pen = 64 * abs((s.row_chunk or 8) - 8)
+        return float(work + scale + bias + cells * _TILE_OVERHEAD + rc_pen)
+
+    if op == "ssd":
+        c = min(s.chunk, S)
+        return float(S * c * 4 + (S // c) * 2 * _TILE_OVERHEAD)
+
+    if op == "paged_attention":
+        c = s.chunk
+        return float(-(-S // c) * 2 * _TILE_OVERHEAD + c * 64)
+
+    raise ValueError(f"unknown op {op!r}")
+
+
+# ------------------------------------------------------------- the search
+
+def tune_op(op: str, *, offline: bool = False, case: dict | None = None,
+            log=None) -> tuple[Schedule, dict]:
+    """Search ``op`` on ``case`` (default: :func:`default_case`). Returns
+    ``(winner, record)`` where record follows ``AUTOTUNE_SCHEMA``."""
+    case = default_case(op) if case is None else case
+    bucket = bucket_of(case)
+    cands = enumerate_schedules(op, case)
+    default = cands[0]
+    use_model = offline or case.get("fns") is None
+    mode = "offline" if use_model else kernel_mode()
+    source = "offline-cost-model" if use_model else "wallclock"
+
+    try:
+        scored = []  # (total, fwd_us, bwd_us, index)
+        for i, c in enumerate(cands):
+            if use_model:
+                cost = _offline_cost(op, case, c)
+                scored.append((cost, round(cost, 1),
+                               round(_BWD_FACTOR * cost, 1), i))
+            else:
+                f, b = time_schedule(case, c, mode)
+                scored.append((f + b, round(f, 1), round(b, 1), i))
+        by_index = {s[3]: s for s in scored}
+        d_fwd, d_bwd = by_index[0][1], by_index[0][2]
+        winner, w_fwd, w_bwd = default, d_fwd, d_bwd
+        for total, f, b, i in sorted(scored):
+            c = cands[i]
+            if c == default or oracle_equivalent(case, c):
+                winner, w_fwd, w_bwd = c, f, b
+                break
+            if log:
+                log(f"# tune: {op}: pruned {c.describe()} — kernel/ref "
+                    f"mismatch on the oracle gate")
+    finally:
+        if case.get("fns") is not None:
+            kops.set_mode("auto", op)
+
+    speedup = (d_fwd + d_bwd) / max(w_fwd + w_bwd, 1e-9)
+    rec = dict(zip(AUTOTUNE_SCHEMA, (
+        op, bucket, mode, winner.to_json(), source, w_fwd, w_bwd,
+        d_fwd, d_bwd, round(speedup, 3))))
+    if log:
+        log(f"# tune: {op}: {winner.describe()} @ {bucket} "
+            f"({source}, speedup {rec['speedup']}x over default)")
+    return winner, rec
+
+
+def tune_all(ops=None, *, offline: bool = False, log=None):
+    """Tune every op (or the given subset); returns ``(table, records)``
+    — the table ready to :meth:`~repro.tune.table.WinnerTable.save`, the
+    records ready for BENCH_autotune.json."""
+    table = WinnerTable(backend=jax.default_backend())
+    records = []
+    for op in (ops or TUNABLE_OPS):
+        winner, rec = tune_op(op, offline=offline, log=log)
+        table.put(rec["bucket"], winner, source=rec["source"],
+                  mode=rec["mode"], fwd_us=rec["fwd_us"],
+                  bwd_us=rec["bwd_us"], default_fwd_us=rec["default_fwd_us"],
+                  default_bwd_us=rec["default_bwd_us"])
+        records.append(rec)
+    return table, records
+
+
+def check_regression(table: WinnerTable, *, threshold: float = 1.2,
+                     log=None) -> dict:
+    """CI guard: WALL-CLOCK (even after an offline search) the tuned
+    cluster-attention schedule against the hard-coded default on the
+    tier-1 bench case; the tuned pick must stay within ``threshold``×.
+    Catches a cost model drifting away from the machine."""
+    case = default_case("cluster_attention")
+    bucket = bucket_of(case)
+    sched = table.lookup(bucket) or DEFAULT_SCHEDULES["cluster_attention"]
+    mode = kernel_mode()
+    try:
+        d_f, d_b = time_schedule(case, DEFAULT_SCHEDULES["cluster_attention"],
+                                 mode)
+        t_f, t_b = time_schedule(case, sched, mode)
+    finally:
+        kops.set_mode("auto", "cluster_attention")
+    ratio = (t_f + t_b) / max(d_f + d_b, 1e-9)
+    out = {"op": "cluster_attention", "bucket": bucket, "mode": mode,
+           "schedule": sched.to_json(), "tuned_us": round(t_f + t_b, 1),
+           "default_us": round(d_f + d_b, 1), "ratio": round(ratio, 3),
+           "threshold": threshold, "ok": bool(ratio <= threshold)}
+    if log:
+        verdict = "ok" if out["ok"] else "REGRESSION"
+        log(f"# tune-check: tuned {out['tuned_us']}us vs default "
+            f"{out['default_us']}us (ratio {out['ratio']} <= {threshold}: "
+            f"{verdict})")
+    return out

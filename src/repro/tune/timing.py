@@ -1,0 +1,63 @@
+"""Timing primitives shared by the autotuner and ``benchmarks/``.
+
+One implementation of "time a jitted call" so the tuner's candidate
+timings and the bench-trajectory JSON can never drift apart:
+``benchmarks/common.timeit`` delegates here. The tuner's own entry is
+:func:`time_candidate` — re-jit per candidate (dispatch resolves at
+trace time, a cached executable would silently keep the previous
+schedule), AOT-compile once, warmup, then a trimmed mean.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3,
+           reduce: str = "median") -> float:
+    """Wall seconds of a jitted call: ``warmup`` discarded calls, then
+    ``iters`` measured ones reduced by ``median`` (benchmarks) or
+    ``trimmed`` mean (tuner: drop the min and max, mean the rest —
+    robust to one GC hiccup without hiding a consistent regression)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    if reduce == "median":
+        return float(np.median(ts))
+    ts = sorted(ts)
+    core = ts[1:-1] if len(ts) > 2 else ts
+    return float(np.mean(core))
+
+
+def compile_peak(jitted, *args):
+    """AOT-compile and return ``(compiled, peak_bytes)`` — the same
+    executable the timing loop then calls, with XLA's temp-buffer
+    estimate (None where the backend can't report it). The tuner and
+    ``benchmarks/run.py`` both use this so candidate timings include no
+    compile time and bench records carry a memory column."""
+    try:
+        compiled = jitted.lower(*args).compile()
+    except Exception:  # noqa: BLE001 — backend without AOT lowering
+        return jitted, None
+    try:
+        peak = int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — backend without memory_analysis
+        peak = None
+    return compiled, peak
+
+
+def time_candidate(make_fn, *args, warmup: int = 2, iters: int = 5):
+    """Tuner timing contract: ``make_fn()`` must return a FRESH
+    ``jax.jit`` wrapper (re-jit per candidate). Returns
+    ``(trimmed_mean_us, peak_bytes)``."""
+    fn, peak = compile_peak(make_fn(), *args)
+    us = timeit(fn, *args, warmup=warmup, iters=iters,
+                reduce="trimmed") * 1e6
+    return us, peak

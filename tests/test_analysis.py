@@ -1,4 +1,4 @@
-"""repro.analysis: policy linter (REP001-REP006) + trace auditor.
+"""repro.analysis: policy linter (REP001-REP007) + trace auditor.
 
 Every rule gets a positive (fires on a minimal violation) and a negative
 (clean idiomatic code passes) fixture test; fixtures are written into a
@@ -47,7 +47,7 @@ def test_rule_registry_is_complete():
     codes = [r.code for r in RULES]
     assert codes == sorted(set(codes)), "duplicate or unsorted rule codes"
     assert codes == ["REP001", "REP002", "REP003", "REP004", "REP005",
-                     "REP006"]
+                     "REP006", "REP007"]
     for r in RULES:
         assert r.title and r.origin and r.fix_hint
         assert RULES_BY_CODE[r.code] is r
@@ -251,6 +251,53 @@ def test_rep006_clean_via_policy_and_out_of_scope(tmp_path):
             """,
     })
     assert "REP006" not in _codes(vs), [v.format() for v in vs]
+
+
+# ------------------------------- REP007: schedule literals stay tuned
+
+def test_rep007_fires_on_block_size_literals_in_kernels(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/kernels/bad.py": """\
+        def flash(q, *, block_q=128, block_k=128):
+            return q
+
+        def launch(q):
+            return flash(q, block_q=64, block_k=64)
+
+        def ssd(x, chunk=256):
+            return x
+        """})
+    hits = [v for v in vs if v.code == "REP007"]
+    assert len(hits) == 5, [v.format() for v in vs]
+    assert all("schedule" in v.fix_hint.lower() or
+               "winner" in v.fix_hint.lower() for v in hits)
+
+
+def test_rep007_clean_required_args_policy_and_out_of_scope(tmp_path):
+    vs = _lint_tree(tmp_path, {
+        # required args + threading a resolved variable is the idiom;
+        # None defaults (dispatch resolves) and bools are fine
+        "src/repro/kernels/good.py": """\
+            def flash(q, *, block_q, block_k, causal=True):
+                return q
+
+            def dispatch(q, block_q=None, block_k=None):
+                bq, bk = block_q or 1, block_k or 1
+                return flash(q, block_q=bq, block_k=bk)
+            """,
+        # policy.py is the one legal home of layout constants
+        "src/repro/kernels/policy.py": """\
+            LANE = 128
+
+            def helper(x, bq=32):
+                return x
+            """,
+        # non-kernel code is out of scope (tune cases pin shapes freely)
+        "src/repro/tune/cases.py": """\
+            def case(chunk=256, bq=32):
+                return chunk + bq
+            """,
+    })
+    assert "REP007" not in _codes(vs), [v.format() for v in vs]
 
 
 # ------------------------------------- suppression / baseline / REP000

@@ -222,3 +222,68 @@ def test_benchmarks_doc_documents_bench_json_schema():
     missing = [k for k in keys if f"`{k}`" not in doc]  # backticked, so
     assert not missing, (                               # prose can't fake it
         f"docs/benchmarks.md missing schema keys: {missing}")
+
+
+def test_readme_documents_autotune_surface():
+    """The autotuning subsystem is public surface: the README must name
+    the env knobs runtime.py actually reads, the trainer retune CLI
+    flags launch/train.py actually exposes, and the CLI + artifacts."""
+    from repro.tune import runtime as tune_rt
+
+    readme = (ROOT / "README.md").read_text()
+    for var in (tune_rt.ENV_ENABLE, tune_rt.ENV_TABLE):
+        assert var in readme, f"README.md does not document {var}"
+    train_src = (ROOT / "src" / "repro" / "launch" / "train.py").read_text()
+    for flag in ("--retune-every", "--tune-table"):
+        assert flag in train_src, f"launch/train.py lost {flag}"
+        assert flag in readme, f"README.md does not document {flag}"
+    for name in ("python -m repro.tune", "--offline",
+                 tune_rt.DEFAULT_TABLE_PATH, "BENCH_autotune.json"):
+        assert name in readme, f"README.md does not mention {name}"
+
+
+def test_architecture_documents_autotune_contract():
+    """docs/architecture.md must document the autotuning layers — the
+    schedule/table/dispatch names the docs promise must actually exist
+    on the modules they describe."""
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "## Kernel autotuning" in arch
+    sect = arch.split("## Kernel autotuning", 1)[1]
+    assert "PR 9" in sect
+
+    from repro.kernels import ops as kops
+    from repro.tune import runtime, schedule, search, table
+    promised = {
+        schedule: ("DEFAULT_SCHEDULES", "enumerate_schedules",
+                   "shape_bucket", "SCHEDULE_CACHE_VERSION",
+                   "extend_bias_table"),
+        table: ("WinnerTable",),
+        search: ("oracle_equivalent", "check_regression"),
+        runtime: ("refresh", "use_table"),
+        kops: ("resolve_schedule", "grid_triple"),
+    }
+    for mod, names in promised.items():
+        for name in names:
+            assert name in arch, f"architecture.md lost autotune {name!r}"
+            if name != "extend_bias_table":  # documented via its home module
+                assert hasattr(mod, name), f"{mod.__name__} lost {name}"
+    # docs-promise check on the helper itself, below the dispatch layer
+    from repro.kernels.cluster_attention import (  # repro-lint: disable=REP002
+        extend_bias_table)  # noqa: F401
+    for flag in ("hoist_scale", "fuse_bias"):
+        assert flag in arch, f"architecture.md lost rewrite flag {flag!r}"
+        assert flag in schedule.Schedule.__dataclass_fields__
+
+
+def test_benchmarks_doc_documents_autotune_schema():
+    """docs/benchmarks.md must document BENCH_autotune.json and every
+    key of the schema repro.tune.search actually emits, plus the winner
+    table artifact."""
+    from repro.tune.search import AUTOTUNE_SCHEMA
+
+    doc = (ROOT / "docs" / "benchmarks.md").read_text()
+    for fname in ("BENCH_autotune.json", "TUNE_winners.json"):
+        assert fname in doc, f"docs/benchmarks.md missing {fname}"
+    missing = [k for k in AUTOTUNE_SCHEMA if f"`{k}`" not in doc]
+    assert not missing, (
+        f"docs/benchmarks.md missing autotune schema keys: {missing}")

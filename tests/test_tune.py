@@ -1,0 +1,414 @@
+"""Kernel autotuning subsystem (repro.tune) — ISSUE 9 acceptance.
+
+Covers the four contracts the subsystem makes:
+
+* enumeration is LEGAL-only (grid-audited candidates, divisibility
+  pruning) with the hard-coded default always candidate 0;
+* the persistent winner table survives every failure mode a file can
+  have — missing, corrupt JSON, stale schedule-cache version, unknown
+  codec — by warning once and falling back to ``DEFAULT_SCHEDULES``,
+  never raising;
+* dispatch consults the installed table at trace time, memoizes per
+  shape signature + generation (allocation-free hot path, memoized
+  lane-pad plan), and a mid-training ``refresh`` NEVER retraces an
+  existing jitted program — the trainer's two-traced-steps invariant
+  survives a table swap (``assert_max_traces``);
+* both dataflow rewrites (``hoist_scale``, ``fuse_bias``) are
+  oracle-equivalent through real dispatch — forward and vjp gradients,
+  direct and under the 4-way shard_map mesh.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _subproc import run_code as _run
+
+from repro.analysis import trace_audit as ta
+from repro.kernels import ops as kops
+from repro.tune import cases as tune_cases
+from repro.tune import runtime as rt
+from repro.tune import search
+from repro.tune.schedule import (DEFAULT_SCHEDULES, SCHEDULE_CACHE_VERSION,
+                                 Schedule, enumerate_schedules, shape_bucket)
+from repro.tune.table import _KNOWN_CODECS, WinnerTable
+
+
+@pytest.fixture(autouse=True)
+def _clean_tune_state(monkeypatch, tmp_path):
+    """Isolate every test from any real TUNE_winners.json in the cwd and
+    from dispatch-mode leakage."""
+    monkeypatch.setenv(rt.ENV_TABLE, str(tmp_path / "absent.json"))
+    rt.reset()
+    yield
+    rt.reset()
+    kops.set_mode("auto")
+    for op in kops.OPS:
+        kops.set_mode("auto", op)
+
+
+def _small_cluster_case():
+    """A deliberately small cluster case (fast interpret-mode grads)."""
+    return tune_cases.cluster_grad_case(120, bq=16, heads=2, d_head=16)
+
+
+# ------------------------------------------------------------ schedules
+
+def test_schedule_json_round_trip_tolerates_unknown_keys():
+    s = Schedule("flash_attention", block_q=64, block_k=32,
+                 hoist_scale=True)
+    d = s.to_json()
+    assert Schedule.from_json(d) == s
+    d["from_the_future"] = 123  # newer writer: extra keys are dropped
+    assert Schedule.from_json(d) == s
+
+
+def test_shape_bucket_pow2_and_dtype():
+    a = shape_bucket("cluster_attention", seq_len=244, heads=4, d_head=32,
+                     dtype="float32")
+    b = shape_bucket("cluster_attention", seq_len=250, heads=4, d_head=32,
+                     dtype="float32")
+    assert a == b == "cluster_attention/S256/H4/D32/float32"
+    c = shape_bucket("cluster_attention", seq_len=244, heads=4, d_head=32,
+                     dtype=jnp.bfloat16)
+    assert c.endswith("bfloat16") and c != a
+
+
+def test_enumerator_default_first_and_unique():
+    for op in search.TUNABLE_OPS:
+        cands = enumerate_schedules(op, search.default_case(op))
+        assert cands[0] == DEFAULT_SCHEDULES[op], op
+        assert len(cands) == len(set(cands)), op
+        assert len(cands) > 1, op  # every op has something to search
+
+
+def test_enumerator_prunes_untiled_ssd_chunks():
+    """Illegal candidates are pruned, never crashed on: an SSD chunk
+    that does not tile the sequence never reaches the timing stage."""
+    case = dict(tune_cases.ssd_case(256), seq_len=100)
+    chunks = {s.chunk for s in enumerate_schedules("ssd", case)}
+    assert 64 not in chunks  # 100 % 64 != 0 — pruned
+    # min(chunk, S) clamps chunk >= S to one full-sequence chunk: legal
+    assert {128, 256, 512} <= chunks
+
+
+def test_grid_audit_rejects_broken_triple():
+    """The enumerator's legality check is the PR 8 pallas grid auditor:
+    a launch triple whose index map runs off the operand is reported as
+    a message (pruned), not an exception."""
+    from repro.tune.schedule import _audit_triple, _flash_triple
+
+    good = _flash_triple(1, 256, 256, 2, 2, 128, 64, 64)
+    assert _audit_triple(good, label="tune-test") is None
+    bad = dict(good, in_shapes=[(2, 64, 128)] + good["in_shapes"][1:])
+    assert _audit_triple(bad, label="tune-test") is not None
+
+
+# --------------------------------------------------- winner-table states
+
+def _one_entry_table(sched=None, bucket="flash_attention/S256/float32"):
+    t = WinnerTable(backend="cpu")
+    t.put(bucket, sched or Schedule("flash_attention", block_q=32,
+                                    block_k=32), source="test")
+    return t
+
+
+def test_winner_table_round_trip(tmp_path):
+    path = str(tmp_path / "winners.json")
+    t = _one_entry_table()
+    assert t.codec in _KNOWN_CODECS
+    t.save(path)
+    loaded, reason = WinnerTable.load(path)
+    assert reason is None
+    assert loaded.version == SCHEDULE_CACHE_VERSION
+    assert loaded.lookup("flash_attention/S256/float32") == \
+        Schedule("flash_attention", block_q=32, block_k=32)
+    assert loaded.lookup("unknown/bucket") is None
+
+
+@pytest.mark.parametrize("corruption", ["stale_version", "bad_codec",
+                                        "garbage", "no_entries"])
+def test_bad_tables_load_as_absent(tmp_path, corruption):
+    path = str(tmp_path / "winners.json")
+    if corruption == "garbage":
+        with open(path, "w") as fh:
+            fh.write('{"version": 1, "entries": {tr')
+    else:
+        raw = _one_entry_table().to_json()
+        if corruption == "stale_version":
+            raw["version"] = SCHEDULE_CACHE_VERSION + 1
+        elif corruption == "bad_codec":
+            raw["codec"] = "json+brotli"
+        elif corruption == "no_entries":
+            raw["entries"] = "oops"
+        with open(path, "w") as fh:
+            json.dump(raw, fh)
+    table, reason = WinnerTable.load(path)
+    assert table is None and reason is not None
+
+
+def test_stale_table_warns_once_and_dispatch_falls_back(tmp_path,
+                                                        monkeypatch):
+    """Version-bump simulation: a winner table recorded under an older
+    schedule-cache version must warn + serve defaults — never raise,
+    and never warn more than once."""
+    path = str(tmp_path / "stale.json")
+    raw = _one_entry_table().to_json()
+    raw["version"] = SCHEDULE_CACHE_VERSION + 1
+    with open(path, "w") as fh:
+        json.dump(raw, fh)
+    monkeypatch.setenv(rt.ENV_TABLE, path)
+    rt.reset()
+    with pytest.warns(RuntimeWarning, match=r"repro\.tune: stale"):
+        sched = rt.lookup("flash_attention", "flash_attention/S256/float32")
+    assert sched == DEFAULT_SCHEDULES["flash_attention"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second lookup is silent
+        assert rt.lookup("flash_attention", "x") == \
+            DEFAULT_SCHEDULES["flash_attention"]
+
+
+def test_corrupt_table_warns_and_dispatch_falls_back(tmp_path, monkeypatch):
+    path = str(tmp_path / "corrupt.json")
+    with open(path, "w") as fh:
+        fh.write("not json at all {{{")
+    monkeypatch.setenv(rt.ENV_TABLE, path)
+    rt.reset()
+    with pytest.warns(RuntimeWarning, match=r"repro\.tune: unreadable"):
+        sched = rt.lookup("ssd", "ssd/S256/float32")
+    assert sched == DEFAULT_SCHEDULES["ssd"]
+
+
+def test_missing_configured_table_warns_but_fresh_checkout_is_silent(
+        tmp_path, monkeypatch):
+    """A missing table the user *asked for* (REPRO_TUNE_TABLE set) warns;
+    the fresh-checkout state (env unset, nothing at the default path)
+    resolves to defaults silently — a clean tree must not trip
+    error-escalated warning filters on its first dispatch."""
+    gone = str(tmp_path / "nowhere.json")
+    monkeypatch.setenv(rt.ENV_TABLE, gone)
+    rt.reset()
+    with pytest.warns(RuntimeWarning, match="no winner table"):
+        assert rt.lookup("ssd", "ssd/S256/float32") == \
+            DEFAULT_SCHEDULES["ssd"]
+    monkeypatch.delenv(rt.ENV_TABLE)
+    monkeypatch.chdir(tmp_path)  # default path resolves to an empty dir
+    rt.reset()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert rt.lookup("ssd", "ssd/S256/float32") == \
+            DEFAULT_SCHEDULES["ssd"]
+
+
+def test_bucket_miss_warns_per_bucket_and_falls_back():
+    with rt.use_table(_one_entry_table()):
+        with pytest.warns(RuntimeWarning, match="no entry"):
+            sched = rt.lookup("cluster_attention", "cluster_attention/S512")
+        assert sched == DEFAULT_SCHEDULES["cluster_attention"]
+
+
+# ----------------------------------------------------- dispatch coupling
+
+def test_dispatch_consults_installed_table():
+    bucket = shape_bucket("flash_attention", seq_len=128, heads=2,
+                          d_head=16, dtype="float32")
+    winner = Schedule("flash_attention", block_q=32, block_k=32,
+                      hoist_scale=True)
+    with rt.use_table(_one_entry_table(winner, bucket)):
+        got = kops.resolve_schedule("flash_attention", seq_len=128,
+                                    heads=2, d_head=16, dtype="float32")
+        assert got == winner
+        # memoized: same generation -> the identical object, no realloc
+        assert kops.resolve_schedule("flash_attention", seq_len=128,
+                                     heads=2, d_head=16,
+                                     dtype="float32") is got
+    # context exit bumped the generation: back to defaults
+    assert kops.resolve_schedule(
+        "flash_attention", seq_len=128, heads=2, d_head=16,
+        dtype="float32") == DEFAULT_SCHEDULES["flash_attention"]
+
+
+def test_pad_plan_memoized_per_shape_dtype():
+    plan = kops._pad_plan(48, jnp.float32)
+    assert plan == (80, float((128 / 48) ** 0.5))
+    assert kops._pad_plan(48, jnp.float32) is plan  # cached object
+    assert kops._pad_plan(128, jnp.float32) == (0, 1.0)
+    assert kops._pad_plan(48, jnp.bfloat16) is not plan  # dtype keyed
+
+
+def test_refresh_never_retraces_existing_programs(tmp_path):
+    """The load-bearing invariant: a winner-table refresh changes what
+    FUTURE traces resolve, but an already-jitted program keeps its
+    baked-in schedule — zero retraces."""
+    kops.set_mode("interpret", "flash_attention")
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 64, 2, 16))
+    f = jax.jit(lambda q: kops.flash_attention(q, q, q).sum())
+    first = f(q)
+    assert f._cache_size() == 1
+
+    path = str(tmp_path / "winners.json")
+    bucket = shape_bucket("flash_attention", seq_len=64, heads=2,
+                          d_head=16, dtype="float32")
+    _one_entry_table(Schedule("flash_attention", block_q=32, block_k=32),
+                     bucket).save(path)
+    assert rt.refresh(path) is True
+
+    with ta.assert_max_traces(f, 0, label="refreshed step"):
+        again = f(q)
+    np.testing.assert_allclose(np.asarray(first), np.asarray(again))
+    # but a FRESH trace resolves the refreshed winner
+    assert kops.resolve_schedule("flash_attention", seq_len=64, heads=2,
+                                 d_head=16).block_q == 32
+
+
+def test_trainer_retune_keeps_two_traced_steps(tmp_path):
+    """Trainer integration: retune_every refreshes the winner table
+    mid-run and the two-traced-steps invariant survives (budget 2 over
+    the whole run, refresh included)."""
+    from repro.configs import get_smoke_config
+    from repro.core.graph import sbm_graph
+    from repro.models import build
+    from repro.runtime.trainer import Trainer, TrainerConfig
+    from repro.tasks import NodeTask
+
+    table_path = str(tmp_path / "winners.json")
+    WinnerTable(backend="cpu").save(table_path)  # empty but valid
+
+    cfg = get_smoke_config("graphormer_slim").replace(dtype="float32")
+    g = sbm_graph(64, 2, p_in=0.2, p_out=0.02, feat_dim=cfg.feat_dim,
+                  n_classes=cfg.n_classes, seed=0)
+    task = NodeTask(g, cfg, bq=8, bk=8, d_b=8)
+    tcfg = TrainerConfig(steps=5, ckpt_every=100,
+                         ckpt_dir=str(tmp_path / "ckpt"),
+                         attn_impl="interpret", interleave_period=3,
+                         retune_every=2, tune_table=table_path,
+                         log_every=100)
+    tr = Trainer(build(cfg), tcfg, task=task)
+    gen0 = rt.generation()
+    with ta.assert_max_traces([tr._step, tr._step_dense], 2,
+                              label="trainer steps across retune"):
+        state, status = tr.run()
+    assert status == "done"
+    assert rt.generation() >= gen0 + 2  # the hook really refreshed
+    assert all(np.isfinite(r["loss"]) for r in tr.history)
+
+
+# -------------------------------------------------- rewrites: oracle gate
+
+@pytest.mark.parametrize("sched", [
+    Schedule("cluster_attention", row_chunk=8, hoist_scale=True),
+    Schedule("cluster_attention", row_chunk=8, fuse_bias=True),
+    Schedule("cluster_attention", row_chunk=8, hoist_scale=True,
+             fuse_bias=True),
+])
+def test_cluster_rewrites_oracle_equivalent(sched):
+    """hoist_scale and fuse_bias through REAL dispatch: kernel-path
+    value_and_grad == ref-path value_and_grad on a graph layout."""
+    assert search.oracle_equivalent(_small_cluster_case(), sched)
+
+
+def test_flash_hoist_scale_oracle_equivalent():
+    case = tune_cases.flash_case(128, heads=2, d_head=16)
+    sched = Schedule("flash_attention", block_q=32, block_k=32,
+                     hoist_scale=True)
+    assert search.oracle_equivalent(case, sched)
+
+
+def test_rewrites_under_shard_map_match_ref():
+    """ISSUE 9 acceptance: with hoist_scale + fuse_bias active as the
+    resolved schedule, grads through the sharded interpret-kernel path
+    (4-way mesh) == single-device ref grads."""
+    out = _run("""
+        import os, warnings
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from repro.core.dual_attention import cluster_sparse_attention
+        from repro.core.graph import sbm_graph
+        from repro.core.reformation import build_layout
+        from repro.parallel.cluster_parallel import sharded_cluster_attention
+        from repro.tune import schedule as ts
+
+        # every bucket resolves to the rewritten schedule (the fallback
+        # default IS the winner under test)
+        ts.DEFAULT_SCHEDULES["cluster_attention"] = ts.Schedule(
+            "cluster_attention", row_chunk=8, hoist_scale=True,
+            fuse_bias=True)
+
+        mesh = compat.make_mesh((4,), ("model",))
+        B, H, KV, Dh, bq = 1, 8, 4, 16, 64
+        g = sbm_graph(500, 4, p_in=0.08, p_out=0.002, seed=0)
+        lay = build_layout(g, bq=bq, bk=bq, k_clusters=4, d_b=8, n_global=1)
+        S = lay.seq_len
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, S, H, Dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, Dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, Dh))
+        bidx = jnp.broadcast_to(jnp.asarray(lay.block_idx),
+                                (B,) + lay.block_idx.shape)
+        bkts = jnp.broadcast_to(jnp.asarray(lay.buckets),
+                                (B,) + lay.buckets.shape)
+        bit = jnp.broadcast_to(jnp.asarray(lay.block_idx_t),
+                               (B,) + lay.block_idx_t.shape)
+        bias = jax.random.normal(jax.random.fold_in(key, 3),
+                                 (H, lay.n_buckets)) * 0.2
+
+        def loss_ref(q, k, v, bias):
+            return (cluster_sparse_attention(q, k, v, bidx, bkts, bias,
+                                             bq=bq, bk=bq) ** 2).sum()
+        gref = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(q, k, v, bias)
+
+        os.environ["REPRO_FORCE_PALLAS"] = "interpret"
+        def loss_sh(q, k, v, bias):
+            return (sharded_cluster_attention(
+                q, k, v, bidx, bkts, bias, bit, mesh=mesh, axis="model",
+                dp_axes=(), bq=bq, bk=bq) ** 2).sum()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")      # fallback would be a bug
+            warnings.filterwarnings(
+                "ignore", message=r"repro\\.tune.*")
+            with compat.use_mesh(mesh):
+                gk = jax.jit(jax.grad(loss_sh, argnums=(0, 1, 2, 3)))(
+                    q, k, v, bias)
+        for name, a, b in zip("q k v bias".split(), gk, gref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-4,
+                                       err_msg=f"d{name}")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+# ------------------------------------------------------------ CLI smoke
+
+def test_offline_cli_writes_artifacts(tmp_path):
+    """``python -m repro.tune --offline`` (the CI smoke): deterministic
+    winner table + BENCH_autotune.json, every winner oracle-gated, every
+    recorded speedup >= 1 (the default is a candidate, so search can
+    never lose to it)."""
+    table = str(tmp_path / "TUNE_winners.json")
+    bench = str(tmp_path / "BENCH_autotune.json")
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.environ.get("PYTHONPATH", "")]))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.tune", "--offline",
+         "--ops", "ssd,paged_attention",
+         "--out-table", table, "--bench-json", bench],
+        capture_output=True, text=True, env=env, cwd=str(tmp_path))
+    assert proc.returncode == 0, proc.stderr
+    loaded, reason = WinnerTable.load(table)
+    assert reason is None and len(loaded.entries) == 2
+    with open(bench) as fh:
+        data = json.load(fh)
+    assert tuple(data["schema"]) == search.AUTOTUNE_SCHEMA
+    assert len(data["records"]) == 2
+    for rec in data["records"]:
+        assert rec["source"] == "offline-cost-model"
+        assert rec["speedup"] >= 1.0
