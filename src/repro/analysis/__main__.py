@@ -29,7 +29,7 @@ _DEFAULT_BASELINE = pathlib.Path(__file__).parent / "baseline.json"
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repro policy linter (rules REP001-REP006) and IR "
+        description="repro policy linter (rules REP001-REP008) and IR "
                     "auditor (--ir); see docs/architecture.md "
                     "'Enforced invariants'")
     ap.add_argument("paths", nargs="*", default=["src"],

@@ -130,7 +130,9 @@ def audit_grid(grid, in_specs=(), out_specs=(), in_shapes=(), out_shapes=(),
                 continue
             try:
                 bi = tuple(int(x) for x in imap(*cell, *prefetch))
-            except Exception as e:  # traced prefetch, arity mismatch, ...
+            # traced prefetch, arity mismatch, ...: recorded as an
+            # IRFinding below, not swallowed
+            except Exception as e:  # repro-lint: disable=REP008
                 unevaluable.add(key_j)
                 findings.append(IRFinding(
                     auditor="pallas_grid", level="warning", program=label,

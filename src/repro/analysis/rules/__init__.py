@@ -13,6 +13,7 @@ from repro.analysis.rules import (rep001_mesh, rep002_kernels,
                                   rep003_seq_concat, rep004_traced_cast,
                                   rep005_task_policy, rep006_dtype_policy,
                                   rep007_schedule_literals)
+from repro.analysis.rules import rep008_swallowed_except
 
 RULES = [
     rep001_mesh.RULE,
@@ -22,6 +23,7 @@ RULES = [
     rep005_task_policy.RULE,
     rep006_dtype_policy.RULE,
     rep007_schedule_literals.RULE,
+    rep008_swallowed_except.RULE,
 ]
 
 RULES_BY_CODE = {r.code: r for r in RULES}

@@ -18,6 +18,15 @@ invisible to ``latest_step``.
   recorded in the manifest, so restore always picks the right
   decompressor regardless of what the restoring host has installed
   (manifests predating the field are zstd — the only codec that existed).
+* verified lineage: every leaf records a crc32 of its raw (uncompressed)
+  bytes in the manifest; ``restore`` verifies by default and raises
+  :class:`CheckpointCorrupt` naming the offending leaf. ``verify`` audits
+  a generation without materializing it, ``generations`` enumerates
+  committed steps newest-first, and ``restore_latest_verified`` walks the
+  retained generations (``keep``) until one passes — the recovery path
+  for a corrupt-or-uncommitted latest checkpoint. ``corrupt`` is the
+  matching deterministic fault-injection hook (repro.resilience): one
+  seeded byte flip in one leaf blob, manifest and COMMITTED untouched.
 """
 
 from __future__ import annotations
@@ -26,12 +35,17 @@ import json
 import os
 import shutil
 import threading
+import warnings
 import zlib
 
 import jax
 import numpy as np
 
 SEP = "/"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint leaf failed checksum/size/decode verification."""
 
 
 def _compress(codec: str, data: bytes) -> bytes:
@@ -122,10 +136,14 @@ class Checkpointer:
                 manifest["extra"] = extra
             for i, (k, v) in enumerate(host.items()):
                 fn = f"leaf_{i:05d}.npy.{codec}"
+                raw = v.tobytes()  # ml_dtypes handles bf16
                 with open(os.path.join(tmp, fn), "wb") as f:
-                    f.write(_compress(codec, v.tobytes()))  # ml_dtypes handles bf16
+                    f.write(_compress(codec, raw))
                 manifest["leaves"][k] = {
-                    "file": fn, "shape": list(v.shape), "dtype": str(v.dtype)}
+                    "file": fn, "shape": list(v.shape), "dtype": str(v.dtype),
+                    # lineage checksum of the raw (uncompressed) bytes —
+                    # restore verifies against this by default
+                    "crc32": zlib.crc32(raw)}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
             with open(os.path.join(tmp, "COMMITTED"), "w") as f:
@@ -165,27 +183,75 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def generations(self):
+        """Committed steps newest-first — rollback enumerates these."""
+        return list(reversed(self.all_steps()))
+
     def load_extra(self, step: int) -> dict | None:
         """The manifest's ``extra`` metadata dict (None if absent)."""
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             return json.load(f).get("extra")
 
-    def restore(self, step: int, *, shardings=None, abstract=None):
+    def _read_leaf(self, d: str, codec: str, k: str, meta: dict,
+                   verify: bool) -> np.ndarray:
+        path = os.path.join(d, meta["file"])
+        with open(path, "rb") as f:
+            blob = f.read()
+        try:
+            raw = _decompress(codec, blob)
+        except Exception as e:
+            # any codec failure on committed bytes means corruption;
+            # surface it as the typed lineage error (note the re-raise)
+            raise CheckpointCorrupt(
+                f"leaf {k!r} ({meta['file']}) of step {d} failed to "
+                f"decompress: {e}") from e
+        dtype = np.dtype(meta["dtype"])
+        want = int(np.prod(meta["shape"], dtype=np.int64)) * dtype.itemsize
+        if len(raw) != want:
+            raise CheckpointCorrupt(
+                f"leaf {k!r} ({meta['file']}) of step {d}: size mismatch "
+                f"({len(raw)} bytes, manifest says {want})")
+        if verify and "crc32" in meta and zlib.crc32(raw) != meta["crc32"]:
+            raise CheckpointCorrupt(
+                f"leaf {k!r} ({meta['file']}) of step {d}: crc32 mismatch "
+                f"— checkpoint bytes are corrupt")
+        return np.frombuffer(raw, dtype).reshape(meta["shape"])
+
+    def verify(self, step: int) -> list[str]:
+        """Audit one generation without materializing it into a tree.
+        Returns a list of human-readable issues (empty = verified)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        if not os.path.exists(os.path.join(d, "COMMITTED")):
+            return [f"step {step}: missing COMMITTED marker"]
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            return [f"step {step}: unreadable manifest ({e})"]
+        codec = manifest.get("codec", "zstd")
+        issues = []
+        for k, meta in manifest["leaves"].items():
+            try:
+                self._read_leaf(d, codec, k, meta, verify=True)
+            except (CheckpointCorrupt, OSError) as e:
+                issues.append(str(e))
+        return issues
+
+    def restore(self, step: int, *, shardings=None, abstract=None,
+                verify: bool = True):
         """shardings: optional pytree of jax.sharding.Sharding (elastic
         placement); abstract: optional pytree of ShapeDtypeStruct to
-        validate/convert against."""
+        validate/convert against. Leaves are checksum-verified against
+        the manifest by default (``verify=False`` skips the crc pass but
+        size/decode corruption still raises :class:`CheckpointCorrupt`)."""
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         codec = manifest.get("codec", "zstd")  # pre-codec manifests: zstd
         flat = {}
         for k, meta in manifest["leaves"].items():
-            with open(os.path.join(d, meta["file"]), "rb") as f:
-                raw = _decompress(codec, f.read())
-            arr = np.frombuffer(raw, np.dtype(meta["dtype"])).reshape(
-                meta["shape"])
-            flat[k] = arr
+            flat[k] = self._read_leaf(d, codec, k, meta, verify)
         tree = _unflatten(flat)
         if shardings is not None:
             tree = jax.tree.map(
@@ -194,3 +260,49 @@ class Checkpointer:
             tree = jax.tree.map(lambda a, sd: jax.numpy.asarray(
                 a, dtype=sd.dtype), tree, abstract)
         return tree
+
+    def restore_latest_verified(self, *, shardings=None, abstract=None):
+        """Restore the newest generation that passes verification.
+
+        Walks committed generations newest-first; a generation that fails
+        checksum/size/decode verification is skipped with a
+        RuntimeWarning and the next-older one is tried. Returns
+        ``(tree, step)`` or None when no generation survives — the
+        recovery ladder's checkpoint rung (corrupt latest falls back to
+        an older verified generation; nothing verified means re-init).
+        """
+        for s in self.generations():
+            try:
+                tree = self.restore(s, shardings=shardings,
+                                    abstract=abstract)
+            except (CheckpointCorrupt, OSError, ValueError, KeyError) as e:
+                warnings.warn(
+                    f"repro.ckpt: checkpoint step {s} failed verification "
+                    f"({e}); falling back to the previous generation",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            return tree, s
+        return None
+
+    # ----------------------------------------------------- fault hook
+
+    def corrupt(self, step: int, seed: int = 0) -> tuple[str, int]:
+        """Deterministic fault-injection hook (repro.resilience): flip
+        one seeded byte in one leaf blob of a committed checkpoint. The
+        manifest and COMMITTED marker are left intact, so directory
+        discovery still trusts the generation — only checksum
+        verification can catch the damage. Returns (file, offset)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves = sorted(manifest["leaves"].values(), key=lambda m: m["file"])
+        rng = np.random.default_rng(seed)
+        meta = leaves[int(rng.integers(len(leaves)))]
+        path = os.path.join(d, meta["file"])
+        with open(path, "rb") as f:
+            blob = bytearray(f.read())
+        off = int(rng.integers(len(blob)))
+        blob[off] ^= 0xFF
+        with open(path, "wb") as f:
+            f.write(bytes(blob))
+        return meta["file"], off

@@ -152,7 +152,9 @@ def main():
                     rec = run_cell(arch, shape, multi_pod=multi_pod)
                     f.write(json.dumps(rec) + "\n")
                     f.flush()
-                except Exception as e:  # noqa: BLE001
+                # sweep survey: the traceback is printed and the cell
+                # lands in the FAILURES summary (exit code reflects it)
+                except Exception as e:  # noqa: BLE001  # repro-lint: disable=REP008
                     traceback.print_exc()
                     failures.append((arch, shape, tag, repr(e)))
     if failures:

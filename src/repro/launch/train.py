@@ -85,6 +85,15 @@ def main(argv=None):
     ap.add_argument("--tune-table", default="",
                     help="winner-table path for --retune-every "
                          "('' = REPRO_TUNE_TABLE / TUNE_winners.json)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault injection spec "
+                         "(repro.resilience), e.g. "
+                         "'nonfinite@5,preempt@7,ckpt_corrupt@10'; "
+                         "REPRO_FAULTS wins when set")
+    ap.add_argument("--max-bad-steps", type=int, default=3,
+                    help="consecutive non-finite steps before rollback "
+                         "to the last verified checkpoint (0 = "
+                         "skip-only, never roll back)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -112,7 +121,9 @@ def main(argv=None):
                        state_dtype=args.state_dtype,
                        attn_impl=args.attn_impl,
                        retune_every=args.retune_every,
-                       tune_table=args.tune_table)
+                       tune_table=args.tune_table,
+                       fault_plan=args.fault_plan,
+                       max_bad_steps=args.max_bad_steps)
     trainer = Trainer(model, tc, lambda s: lm_batch(dc, s),
                       mesh=mesh, recipe=recipe)
     from repro.kernels.ops import dispatch_table
@@ -188,7 +199,9 @@ def _graph_main(args, cfg, model):
                        interleave_period=interleave,
                        elastic_every=elastic_every,
                        retune_every=args.retune_every,
-                       tune_table=args.tune_table)
+                       tune_table=args.tune_table,
+                       fault_plan=args.fault_plan,
+                       max_bad_steps=args.max_bad_steps)
     trainer = Trainer(model, tc, task=task, mesh=mesh, recipe=recipe)
     state, status = trainer.run()
     if not trainer.history:  # restored a finished run: nothing to do

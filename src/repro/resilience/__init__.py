@@ -1,0 +1,14 @@
+"""Fault-tolerance layer: deterministic fault injection + chaos sweep.
+
+* :mod:`repro.resilience.faults` — seeded :class:`FaultPlan`
+  (``REPRO_FAULTS`` / ``TrainerConfig.fault_plan``) consumed through
+  explicit hook points in the trainer, checkpointer and serve engine.
+* :mod:`repro.resilience.chaos` — ``python -m repro.resilience`` runs
+  the fault matrix end-to-end and writes ``RESILIENCE_report.json``;
+  every recovery that promises ``replay: exact`` is checked bitwise
+  against an unfaulted run.
+"""
+
+from repro.resilience.faults import ENV_VAR, KINDS, Fault, FaultPlan, Preempted
+
+__all__ = ["ENV_VAR", "KINDS", "Fault", "FaultPlan", "Preempted"]

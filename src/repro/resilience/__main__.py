@@ -1,0 +1,35 @@
+"""CLI: ``python -m repro.resilience`` — chaos sweep over the fault
+matrix; exits nonzero when any injected fault is not recovered."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.resilience",
+        description="chaos sweep: inject the fault matrix (non-finite "
+                    "steps, preemption, checkpoint corruption, serve "
+                    "overload/deadlines) and verify every recovery, "
+                    "bitwise where promised")
+    ap.add_argument("--offline", action="store_true",
+                    help="deterministic CPU-only sweep (CI mode; the "
+                         "sweep is currently always offline — the flag "
+                         "records the mode in the report)")
+    ap.add_argument("--report", default="RESILIENCE_report.json")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="training steps per faulted run")
+    ap.add_argument("--only", default=None,
+                    help="substring filter over fault case names")
+    args = ap.parse_args(argv)
+
+    from repro.resilience.chaos import run_chaos
+    doc = run_chaos(args.report, offline=args.offline, steps=args.steps,
+                    only=args.only)
+    return 0 if doc["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,15 @@ Production concerns implemented (and unit-tested at CPU scale):
   pure), so a restart replays nothing and skips nothing;
 * async checkpoints every `ckpt_every` steps + graceful save on
   preemption (SIGTERM) and on uncaught worker failure;
-* failure injection hook (`fail_at_step`) for restart tests;
+* failure injection hook (`fail_at_step`) for restart tests, plus the
+  seeded ``FaultPlan`` hooks (repro.resilience: ``fault_plan`` /
+  ``REPRO_FAULTS``) — non-finite loss, mid-step preemption after
+  donation, checkpoint byte corruption;
+* self-healing: a jit-safe non-finite guard inside the jitted step
+  (``jnp.where`` skip-update + a consecutive-bad-step counter riding the
+  state carry — no extra traced programs); after ``max_bad_steps``
+  consecutive bad steps the loop rolls back to the newest
+  checksum-verified checkpoint outside the bad streak and replays;
 * straggler mitigation policy: per-step wall-time EMA; steps slower than
   `straggler_factor` x EMA are flagged and the policy callback fires (at
   real scale: re-dispatch / hot-spare swap; here: recorded + surfaced);
@@ -46,6 +54,7 @@ import dataclasses
 import os
 import signal
 import time
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -53,10 +62,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.ckpt.checkpoint import Checkpointer
+from repro.ckpt.checkpoint import Checkpointer, CheckpointCorrupt
 from repro.kernels import ops as kernel_ops
 from repro.optim.adamw import AdamW, warmup_cosine
 from repro.parallel.axes import axis_rules
+from repro.resilience.faults import FaultPlan, Preempted
 from repro.tasks.base import BatchFnTask
 
 
@@ -101,6 +111,18 @@ class TrainerConfig:
     # stays live for the crash save, and sharded runs fall back to their
     # periodic checkpoints.
     rescue_every: int = 1
+    # deterministic fault injection (repro.resilience.faults): a seeded
+    # FaultPlan spec like "nonfinite@5,preempt@7,ckpt_corrupt@10,seed=3".
+    # REPRO_FAULTS wins over this field when set. Empty = no faults.
+    fault_plan: str = ""
+    # self-healing escalation: after this many CONSECUTIVE non-finite
+    # steps (each already skip-updated by the in-step guard), roll back
+    # to the newest verified checkpoint outside the bad streak and
+    # replay. 0 disables escalation (skip-only).
+    max_bad_steps: int = 3
+    # hard cap on rollbacks per run — a fault that survives replay this
+    # many times is not transient; raise instead of looping forever
+    max_rollbacks: int = 3
 
 
 @dataclasses.dataclass
@@ -108,6 +130,12 @@ class StragglerReport:
     step: int
     seconds: float
     ema: float
+
+
+@dataclasses.dataclass
+class RollbackReport:
+    at_step: int   # loop step the escalation fired at
+    to_step: int   # verified checkpoint step replay resumed from
 
 
 class Trainer:
@@ -139,29 +167,52 @@ class Trainer:
         self.stragglers: list[StragglerReport] = []
         self.history: list[dict] = []
         self.ir_findings: list = []
+        self.rollbacks: list[RollbackReport] = []
+        self.fault_log: list[dict] = []
+        self.faults = FaultPlan.resolve(cfg.fault_plan)
         self._preempted = False
         self._rescue: tuple[int, Any] | None = None
         self._donate = donate
 
         def make_step(loss):
-            def step_fn(state, batch):
+            def step_fn(state, batch, fault):
                 def loss_fn(p):
-                    return loss(p, batch)
+                    lval, metrics = loss(p, batch)
+                    # nonfinite fault hook (repro.resilience): ``fault``
+                    # is a traced fp32 scalar — exactly 1.0 on healthy
+                    # steps (bitwise identity), NaN on an injected step
+                    # (poisons loss and every gradient). Same shape and
+                    # dtype either way, so no retrace.
+                    return lval * fault, metrics
 
-                if recipe is not None and mesh is not None:
-                    with axis_rules(recipe, mesh):
-                        (lval, metrics), grads = jax.value_and_grad(
-                            loss_fn, has_aux=True)(state["params"])
-                        new_p, new_opt = self.opt.update(
-                            grads, state["opt"], state["params"])
-                else:
+                def fwd_bwd():
                     (lval, metrics), grads = jax.value_and_grad(
                         loss_fn, has_aux=True)(state["params"])
                     new_p, new_opt = self.opt.update(
                         grads, state["opt"], state["params"])
-                return ({"params": new_p, "opt": new_opt,
-                         "step": state["step"] + 1},
-                        {"loss": lval, **metrics})
+                    return lval, metrics, grads, new_p, new_opt
+
+                if recipe is not None and mesh is not None:
+                    with axis_rules(recipe, mesh):
+                        lval, metrics, grads, new_p, new_opt = fwd_bwd()
+                else:
+                    lval, metrics, grads, new_p, new_opt = fwd_bwd()
+                # jit-safe non-finite guard: a bad loss or any bad grad
+                # leaf skips the update (jnp.where keeps the old state
+                # bitwise) and bumps the consecutive-bad-step counter
+                # riding the carry; a good step resets it
+                ok = jnp.isfinite(lval)
+                for g in jax.tree.leaves(grads):
+                    ok = ok & jnp.all(jnp.isfinite(g))
+                keep = lambda new, old: jax.tree.map(  # noqa: E731
+                    lambda a, b: jnp.where(ok, a, b), new, old)
+                bad = jnp.where(ok, jnp.zeros((), jnp.int32),
+                                state["bad"] + 1)
+                return ({"params": keep(new_p, state["params"]),
+                         "opt": keep(new_opt, state["opt"]),
+                         "step": state["step"] + 1, "bad": bad},
+                        {"loss": lval, "bad_steps": bad,
+                         "skipped": (~ok).astype(jnp.int32), **metrics})
 
             return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
 
@@ -203,21 +254,34 @@ class Trainer:
     def init_state(self, seed: int = 0):
         params = self.model.init(jax.random.PRNGKey(seed))
         return {"params": params, "opt": self.opt.init(params),
-                "step": jnp.zeros((), jnp.int32)}
+                "step": jnp.zeros((), jnp.int32),
+                # consecutive non-finite steps (in-step guard carry)
+                "bad": jnp.zeros((), jnp.int32)}
 
-    def restore_or_init(self, seed: int = 0):
-        latest = self.ckpt.latest_step()
-        if latest is None:
-            return self.init_state(seed), 0
-        state = self.ckpt.restore(latest)
+    def _adopt(self, state, step: int):
+        """Normalize a freshly-restored tree into step-ready state and
+        load the task's saved state from the manifest."""
         state["step"] = jnp.asarray(state["step"], jnp.int32)
-        extra = self.ckpt.load_extra(latest)
+        # checkpoints predating the non-finite guard carry no counter
+        state.setdefault("bad", jnp.zeros((), jnp.int32))
+        state["bad"] = jnp.asarray(state["bad"], jnp.int32)
+        extra = self.ckpt.load_extra(step)
         if extra:
             # "elastic" is the pre-Task manifest key; keep restoring it
             sd = extra.get("task") or extra.get("elastic")
             if sd:
                 self.task.load_state_dict(sd)
-        return state, latest
+        return state
+
+    def restore_or_init(self, seed: int = 0):
+        # newest generation that passes checksum verification; a corrupt
+        # or uncommitted latest falls back (with a RuntimeWarning) to an
+        # older retained generation, and nothing verified means re-init
+        got = self.ckpt.restore_latest_verified()
+        if got is None:
+            return self.init_state(seed), 0
+        state, latest = got
+        return self._adopt(state, latest), latest
 
     def _ckpt_extra(self):
         sd = self.task.state_dict()
@@ -261,14 +325,15 @@ class Trainer:
                 forbid_seq_allgather=bool(seq),
                 seq_len=max(seq) if seq else None,
                 seq_allgather_level="warning")
+        one = np.float32(1.0)  # healthy-step fault operand
         for name, fn in self._steps.items():
             label = f"trainer:{name}"
             with self._mesh_ctx():
                 if budget is not None:
-                    hlo = fn.lower(state, batch).compile().as_text()
+                    hlo = fn.lower(state, batch, one).compile().as_text()
                     findings += audit_collectives(hlo, budget, label=label)
                 findings += audit_dtype_flow(
-                    jax.make_jaxpr(fn)(state, batch), label=label)
+                    jax.make_jaxpr(fn)(state, batch, one), label=label)
         self.ir_findings = findings
         if errors(findings):
             raise IRAuditError(findings, label="trainer ir_audit")
@@ -302,7 +367,8 @@ class Trainer:
         epoch_losses: list[float] = []
         epoch_seconds = 0.0
         try:
-            for step in range(start, cfg.steps):
+            step = start
+            while step < cfg.steps:
                 if step == cfg.fail_at_step:
                     raise RuntimeError(f"injected failure at step {step}")
                 t0 = time.perf_counter()
@@ -311,8 +377,30 @@ class Trainer:
                 # cadence survives restart
                 variant = task.variant(step, cfg.interleave_period)
                 batch = task.batches(step)
+                # fault hooks (repro.resilience): the nonfinite operand
+                # is 1.0 (bitwise identity) unless this step is armed;
+                # preemption keeps the pre-step carry so the raise lands
+                # after donation consumed it — worst-case instant
+                nf = self.faults.take("nonfinite", step)
+                scale = np.float32("nan" if nf else 1.0)
+                pre = self.faults.take("preempt", step)
+                prev = state if pre is not None else None
                 with self._mesh_ctx():
-                    state, metrics = self._steps[variant](state, batch)
+                    state, metrics = self._steps[variant](
+                        state, batch, scale)
+                if nf is not None:
+                    self.fault_log.append(
+                        {"kind": "nonfinite", "step": step})
+                if pre is not None:
+                    # a real preemption kills the process mid-step: the
+                    # outputs never escape, and under donation the
+                    # inputs are already deleted — exactly what the
+                    # crash save's rescue fallback must survive
+                    state = prev
+                    self.fault_log.append(
+                        {"kind": "preempt", "step": step})
+                    raise Preempted(
+                        f"injected preemption at step {step}")
                 metrics = {k: float(v) for k, v in metrics.items()}
                 dt = time.perf_counter() - t0
                 if step - start >= 2:  # skip compile-dominated warmup steps
@@ -332,8 +420,10 @@ class Trainer:
                     self._rescue = (step + 1, jax.device_get(state))
                 if cfg.elastic_every > 0:
                     # compile-dominated warmup steps would poison the LDR
-                    # denominator (the straggler EMA skips them too)
-                    if step - start >= 2:
+                    # denominator (the straggler EMA skips them too);
+                    # non-finite losses (guard-skipped steps) would
+                    # poison the mean
+                    if step - start >= 2 and np.isfinite(metrics["loss"]):
                         epoch_losses.append(metrics["loss"])
                         epoch_seconds += dt
                     if (step + 1) % cfg.elastic_every == 0:
@@ -348,21 +438,38 @@ class Trainer:
                     # never retraces the live step executables
                     from repro.tune import runtime as tune_runtime
                     tune_runtime.refresh(cfg.tune_table or None)
-                if (step + 1) % cfg.ckpt_every == 0:
+                # the final blocking save below covers step == cfg.steps
+                if (step + 1) % cfg.ckpt_every == 0 and \
+                        step + 1 != cfg.steps:
                     self.ckpt.save(step + 1, state,
                                    extra=self._ckpt_extra())
+                    self._maybe_corrupt(step + 1)
                 if self._preempted:
                     self.ckpt.save(step + 1, state, blocking=True,
                                    extra=self._ckpt_extra())
                     return state, "preempted"
+                # escalation: the in-step guard already skipped each bad
+                # update; a persistent streak means the carry itself may
+                # be poisoned (e.g. optimizer moments) — roll back to
+                # the newest verified checkpoint outside the streak
+                if cfg.max_bad_steps > 0 and \
+                        metrics["bad_steps"] >= cfg.max_bad_steps:
+                    state, step = self._rollback(step + 1, seed)
+                    ema = None
+                    epoch_losses, epoch_seconds = [], 0.0
+                    continue
+                step += 1
             self.ckpt.save(cfg.steps, state, blocking=True,
                            extra=self._ckpt_extra())
+            self._maybe_corrupt(cfg.steps)
             return state, "done"
         except Exception:
             # crash-consistent save so a restart resumes, then re-raise
             try:
                 self._crash_save(state)
-            except Exception:
+            # best-effort rescue: a failing save must never mask the
+            # original crash we are about to re-raise
+            except Exception:  # repro-lint: disable=REP008
                 pass
             raise
         finally:
@@ -371,6 +478,63 @@ class Trainer:
                 signal.signal(signal.SIGTERM, old)
             except (ValueError, TypeError):
                 pass
+
+    def _maybe_corrupt(self, step: int):
+        """ckpt_corrupt fault hook: flip one seeded byte in the
+        checkpoint just written (after the async write lands)."""
+        cf = self.faults.take("ckpt_corrupt", step)
+        if cf is None:
+            return
+        self.ckpt.wait()
+        fn, off = self.ckpt.corrupt(step, seed=self.faults.seed)
+        self.fault_log.append({"kind": "ckpt_corrupt", "step": step,
+                               "file": fn, "offset": off})
+
+    def _rollback(self, at_step: int, seed: int):
+        """Roll back to the newest verified checkpoint outside the bad
+        streak (saved consecutive-bad counter == 0) and return
+        ``(state, step)`` to replay from; re-init at step 0 when no
+        generation qualifies. Tasks are seekable, so replay recomputes
+        the same batches deterministically."""
+        cfg = self.cfg
+        if len(self.rollbacks) >= cfg.max_rollbacks:
+            raise RuntimeError(
+                f"non-finite steps persist after {len(self.rollbacks)} "
+                f"rollbacks (max_rollbacks={cfg.max_rollbacks}); "
+                "refusing to loop")
+        self.ckpt.wait()
+        state = to = None
+        for s in self.ckpt.generations():
+            try:
+                tree = self.ckpt.restore(s)
+            except (CheckpointCorrupt, OSError, ValueError, KeyError) as e:
+                warnings.warn(
+                    f"repro.runtime: rollback skipping checkpoint step "
+                    f"{s} (failed verification: {e})",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            if int(np.asarray(tree.get("bad", 0))) > 0:
+                # saved mid-streak: its step counter has advanced past
+                # updates the guard skipped, so replaying from here
+                # would drop those updates forever — only a generation
+                # outside the streak gives exact replay
+                warnings.warn(
+                    f"repro.runtime: rollback skipping checkpoint step "
+                    f"{s} (saved inside a bad streak)",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            state, to = self._adopt(tree, s), s
+            break
+        if state is None:
+            state, to = self.init_state(seed), 0
+        self._rescue = None  # pre-rollback copy is stale
+        self.rollbacks.append(RollbackReport(at_step, to))
+        warnings.warn(
+            f"repro.runtime: {self.cfg.max_bad_steps} consecutive "
+            f"non-finite steps at step {at_step}; rolled back to "
+            f"verified checkpoint step {to} and replaying",
+            RuntimeWarning, stacklevel=2)
+        return state, to
 
     def _crash_save(self, state):
         """Rescue checkpoint after an uncaught failure. When the step

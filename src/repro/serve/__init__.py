@@ -5,8 +5,9 @@ graph transformers (:class:`GraphServe`).
 ``python -m repro.launch.serve`` is the CLI over both.
 """
 
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import Admitted, Rejected, ServeEngine
 from repro.serve.graph_serve import GraphServe, graph_hash
 from repro.serve.paged import BlockAllocator
 
-__all__ = ["ServeEngine", "GraphServe", "BlockAllocator", "graph_hash"]
+__all__ = ["ServeEngine", "Admitted", "Rejected", "GraphServe",
+           "BlockAllocator", "graph_hash"]

@@ -24,6 +24,17 @@ engine's life — audited on every ``run()`` via
 programs run under the host mesh with the decode sharding recipe, and
 ``sparse=True`` applies the TorchGT cluster-sparse (window + global
 sink) mask on the ``kernels/ops`` dispatch path.
+
+Graceful degradation (repro.resilience): ``max_queue`` bounds the
+admission queue — ``submit`` past capacity returns a typed
+:class:`Rejected` ("overloaded") instead of buffering unboundedly; a
+per-request ``deadline`` (seconds after ``run()`` starts, like
+``arrival``) sheds past-due work both at admission and mid-flight
+(partial output lands in ``self.shed``); watchdog counters
+(``rejected_overload`` / ``shed_deadline`` / ``queue_peak``) surface in
+the run stats. All of it is host-side scheduling — a warm engine keeps
+its trace budget of 0 under overload and shedding.
+``inject_burst`` is the deterministic arrival-burst fault hook.
 """
 
 from __future__ import annotations
@@ -43,12 +54,31 @@ from repro.parallel import axes as pax
 from repro.serve.paged import BlockAllocator
 
 
+@dataclasses.dataclass(frozen=True)
+class Admitted:
+    """Typed ``submit`` result: the request was queued."""
+    rid: object
+    queued: int              # queue depth right after enqueue
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Typed ``submit``/shed result: the engine refused or dropped the
+    request. ``reason`` is ``"overloaded"`` (admission queue at
+    ``max_queue``) or ``"deadline"`` (past-due, shed at admission or
+    mid-flight)."""
+    rid: object
+    reason: str
+    detail: str = ""
+
+
 @dataclasses.dataclass
 class _Request:
     rid: object
     prompt: list
     max_tokens: int
     arrival: float           # seconds after run() starts (offered load)
+    deadline: float | None = None  # same clock as arrival; None = none
     t_submit: float = 0.0
     t_admit: float = -1.0
     t_first: float = -1.0    # first generated token (TTFT)
@@ -77,7 +107,7 @@ class ServeEngine:
                  chunk: int | None = None,
                  num_blocks: int | None = None, sparse: bool = False,
                  mesh_model: int = 1, eos: int | None = None,
-                 ir_audit: bool = False):
+                 ir_audit: bool = False, max_queue: int | None = None):
         if model.paged_decode is None or model.prefill_chunk is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged serving path "
@@ -173,6 +203,13 @@ class ServeEngine:
         self.request_stats: list[dict] = []
         self.prefill_calls = 0
         self.decode_calls = 0
+        # graceful degradation (host-side, never touches the programs)
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.rejected: list[Rejected] = []
+        self.shed: dict = {}         # rid -> partial output at shed time
+        self.rejected_overload = 0   # watchdog counters (run stats)
+        self.shed_deadline = 0
+        self.queue_peak = 0
         self._ir_audit_wanted = bool(ir_audit)
         self.ir_findings: list = []
         self._ir_audited = False
@@ -248,10 +285,16 @@ class ServeEngine:
     # ---------------------------------------------------------- admission
 
     def submit(self, rid, prompt_tokens, max_tokens: int,
-               arrival: float = 0.0):
+               arrival: float = 0.0, deadline: float | None = None):
         """Queue a request. ``arrival`` (seconds after ``run()`` starts)
         models offered load — the scheduler will not admit the request
-        before its arrival time."""
+        before its arrival time. ``deadline`` (same clock) marks the
+        request past-due: shed at admission or mid-flight once exceeded.
+
+        Returns :class:`Admitted`, or :class:`Rejected("overloaded")
+        <Rejected>` when the admission queue already holds ``max_queue``
+        requests — the caller sees backpressure instead of the queue
+        silently growing p99. Malformed requests still raise."""
         prompt = [int(t) for t in prompt_tokens]
         if not prompt:
             raise ValueError(f"request {rid!r}: empty prompt")
@@ -267,16 +310,46 @@ class ServeEngine:
             raise ValueError(
                 f"request {rid!r}: needs {need} blocks, pool has "
                 f"{self.allocator.num_blocks - 1} usable")
-        self._queue.append(_Request(rid, prompt, int(max_tokens),
-                                    float(arrival),
-                                    t_submit=float(arrival)))
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            rej = Rejected(rid, "overloaded",
+                           f"admission queue at max_queue={self.max_queue}")
+            self.rejected.append(rej)
+            self.rejected_overload += 1
+            return rej
+        self._queue.append(_Request(
+            rid, prompt, int(max_tokens), float(arrival),
+            deadline=None if deadline is None else float(deadline),
+            t_submit=float(arrival)))
+        self.queue_peak = max(self.queue_peak, len(self._queue))
+        return Admitted(rid, len(self._queue))
+
+    def inject_burst(self, n: int, *, arrival: float = 0.0,
+                     prompt_len: int = 6, max_tokens: int = 4,
+                     deadline: float | None = None, seed: int = 0):
+        """Deterministic fault-injection hook (repro.resilience): submit
+        a seeded burst of ``n`` requests at one arrival instant — the
+        overload trigger for the bounded-queue / shedding paths.
+        Returns the list of typed ``submit`` results."""
+        rng = np.random.default_rng(seed)
+        hi = max(2, min(64, self.cfg.vocab_size))
+        return [self.submit(f"burst-{seed}-{i}",
+                            rng.integers(1, hi, prompt_len).tolist(),
+                            max_tokens, arrival=arrival, deadline=deadline)
+                for i in range(n)]
 
     def _admit(self, now: float):
         """FIFO admission: the queue head is admitted once it has
-        arrived, a slot is free, and its whole block budget fits."""
+        arrived, a slot is free, and its whole block budget fits.
+        Past-due heads are shed here instead of admitted."""
         for s in range(self.B):
-            if not self._queue or self._slots[s] is not None:
+            if self._slots[s] is not None:
                 continue
+            while self._queue and \
+                    self._queue[0].deadline is not None and \
+                    now > self._queue[0].deadline:
+                self._shed(self._queue.popleft(), now, "admission")
+            if not self._queue:
+                break
             req = self._queue[0]
             if req.arrival > now:
                 break
@@ -301,16 +374,45 @@ class ServeEngine:
         req = self._slots[s]
         req.t_done = now
         self.done[req.rid] = list(req.out)
-        self.request_stats.append({
+        self.request_stats.append(self._stats_row(req, now, shed=False))
+        self.allocator.free(req.blocks)
+        self._slots[s] = None
+        self._bt[s] = 0
+
+    def _stats_row(self, req: _Request, now: float, *, shed: bool) -> dict:
+        return {
             "rid": req.rid, "prompt_len": len(req.prompt),
             "new_tokens": len(req.out), "t_submit": req.t_submit,
             "t_admit": req.t_admit, "t_first": req.t_first,
             "t_done": now, "latency_s": now - req.t_submit,
-            "ttft_s": req.t_first - req.t_submit,
-        })
-        self.allocator.free(req.blocks)
-        self._slots[s] = None
-        self._bt[s] = 0
+            "ttft_s": req.t_first - req.t_submit, "shed": shed,
+        }
+
+    def _shed(self, req: _Request, now: float, where: str):
+        """Deadline shed: drop past-due work (queued or in-flight) and
+        surface it as a typed rejection; any tokens generated before the
+        deadline land in ``self.shed[rid]``."""
+        req.t_done = now
+        self.shed[req.rid] = list(req.out)
+        self.rejected.append(Rejected(
+            req.rid, "deadline",
+            f"past deadline {req.deadline:.3f}s at {where} ({now:.3f}s)"))
+        self.shed_deadline += 1
+        self.request_stats.append(self._stats_row(req, now, shed=True))
+        if req.blocks:
+            self.allocator.free(req.blocks)
+            req.blocks = []
+
+    def _shed_slots(self, now: float):
+        """Mid-flight deadline scan: an admitted request past its
+        deadline stops consuming prefill/decode work immediately."""
+        for s in range(self.B):
+            req = self._slots[s]
+            if req is not None and req.deadline is not None and \
+                    now > req.deadline:
+                self._shed(req, now, "mid-flight")
+                self._slots[s] = None
+                self._bt[s] = 0
 
     def _finished(self, req: _Request) -> bool:
         return len(req.out) >= req.max_tokens or (
@@ -400,11 +502,17 @@ class ServeEngine:
             "prefill_calls": self.prefill_calls,
             "decode_calls": self.decode_calls,
             "traced_programs": self.traced_programs(),
+            # degradation watchdog: nonzero means the engine shed load
+            # instead of buffering it
+            "rejected_overload": self.rejected_overload,
+            "shed_deadline": self.shed_deadline,
+            "queue_peak": self.queue_peak,
         }
 
     def _run_loop(self):
         while self._queue or any(r is not None for r in self._slots):
             now = time.perf_counter() - self._t0
+            self._shed_slots(now)
             self._admit(now)
             ran = self._prefill_step(now)
             ran = self._decode_step() or ran

@@ -126,7 +126,8 @@ def _audit_triple(triple: dict, scalar_prefetch=(), label="") -> str | None:
             triple["grid"], triple["in_specs"], triple["out_specs"],
             triple["in_shapes"], triple["out_shapes"],
             scalar_prefetch=scalar_prefetch, label=label)
-    except Exception as e:  # noqa: BLE001 — pruning, never crashing
+    # pruning, never crashing: the reason string rejects the candidate
+    except Exception as e:  # noqa: BLE001  # repro-lint: disable=REP008
         return f"grid audit raised: {e!r}"
     bad = _ir_errors(findings)
     return bad[0].message if bad else None

@@ -79,7 +79,9 @@ class WinnerTable:
         try:
             with open(path) as fh:
                 raw = json.load(fh)
-        except Exception as e:  # noqa: BLE001 — corrupt-JSON tolerance
+        # corrupt-JSON tolerance: the reason string is returned and the
+        # caller (runtime.refresh) warns with it
+        except Exception as e:  # noqa: BLE001  # repro-lint: disable=REP008
             return None, f"unreadable winner table {path}: {e!r}"
         if not isinstance(raw, dict) or not isinstance(
                 raw.get("entries", None), dict):

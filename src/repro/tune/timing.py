@@ -44,11 +44,14 @@ def compile_peak(jitted, *args):
     compile time and bench records carry a memory column."""
     try:
         compiled = jitted.lower(*args).compile()
-    except Exception:  # noqa: BLE001 — backend without AOT lowering
+    # backend without AOT lowering: timing falls back to the plain
+    # jitted callable, peak stays None (a documented return state)
+    except Exception:  # noqa: BLE001  # repro-lint: disable=REP008
         return jitted, None
     try:
         peak = int(compiled.memory_analysis().temp_size_in_bytes)
-    except Exception:  # noqa: BLE001 — backend without memory_analysis
+    # backend without memory_analysis: peak None is a documented state
+    except Exception:  # noqa: BLE001  # repro-lint: disable=REP008
         peak = None
     return compiled, peak
 

@@ -1,4 +1,4 @@
-"""repro.analysis: policy linter (REP001-REP007) + trace auditor.
+"""repro.analysis: policy linter (REP001-REP008) + trace auditor.
 
 Every rule gets a positive (fires on a minimal violation) and a negative
 (clean idiomatic code passes) fixture test; fixtures are written into a
@@ -47,7 +47,7 @@ def test_rule_registry_is_complete():
     codes = [r.code for r in RULES]
     assert codes == sorted(set(codes)), "duplicate or unsorted rule codes"
     assert codes == ["REP001", "REP002", "REP003", "REP004", "REP005",
-                     "REP006", "REP007"]
+                     "REP006", "REP007", "REP008"]
     for r in RULES:
         assert r.title and r.origin and r.fix_hint
         assert RULES_BY_CODE[r.code] is r
@@ -298,6 +298,69 @@ def test_rep007_clean_required_args_policy_and_out_of_scope(tmp_path):
             """,
     })
     assert "REP007" not in _codes(vs), [v.format() for v in vs]
+
+
+# ------------------------------- REP008: swallowed broad excepts
+
+def test_rep008_fires_on_swallowing_broad_handlers(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/runtime/bad.py": """\
+        import logging
+
+        def f(x):
+            try:
+                return x()
+            except:
+                pass
+
+        def g(x):
+            try:
+                return x()
+            except Exception:
+                pass
+
+        def h(x):
+            try:
+                return x()
+            except BaseException as e:
+                logging.error(e)
+        """})
+    hits = [v for v in vs if v.code == "REP008"]
+    assert len(hits) == 3, [v.format() for v in vs]
+    assert all("swallows" in v.message for v in hits)
+
+
+def test_rep008_clean_on_raise_warn_narrow_and_suppressed(tmp_path):
+    vs = _lint_tree(tmp_path, {"src/repro/runtime/good.py": """\
+        import warnings
+
+        def reraises(x):
+            try:
+                return x()
+            except Exception as e:
+                raise RuntimeError("wrapped") from e
+
+        def warns(x):
+            try:
+                return x()
+            except Exception as e:
+                warnings.warn(f"recovered: {e}", RuntimeWarning)
+                return None
+
+        def narrow(x):
+            try:
+                return x()
+            except ValueError:
+                return None
+
+        def justified(x):
+            try:
+                return x()
+            # crash path: state may be half-dead, any error here would
+            # mask the original exception.  # repro-lint: disable=REP008
+            except Exception:
+                return None
+        """})
+    assert "REP008" not in _codes(vs), [v.format() for v in vs]
 
 
 # ------------------------------------- suppression / baseline / REP000

@@ -287,3 +287,60 @@ def test_benchmarks_doc_documents_autotune_schema():
     missing = [k for k in AUTOTUNE_SCHEMA if f"`{k}`" not in doc]
     assert not missing, (
         f"docs/benchmarks.md missing autotune schema keys: {missing}")
+
+
+def test_readme_documents_resilience_surface():
+    """The fault-tolerance layer is public surface: the README must name
+    the fault-plan env/CLI/config knobs launch/train.py and the trainer
+    actually expose, the serve degradation knobs, and the chaos CLI +
+    its artifact."""
+    from repro.resilience import ENV_VAR
+    from repro.runtime.trainer import TrainerConfig
+
+    readme = (ROOT / "README.md").read_text()
+    assert ENV_VAR in readme, f"README.md does not document {ENV_VAR}"
+    train_src = (ROOT / "src" / "repro" / "launch" / "train.py").read_text()
+    for flag in ("--fault-plan", "--max-bad-steps"):
+        assert flag in train_src, f"launch/train.py lost {flag}"
+        assert flag in readme, f"README.md does not document {flag}"
+    for field in ("fault_plan", "max_bad_steps", "max_rollbacks"):
+        assert field in TrainerConfig.__dataclass_fields__, \
+            f"TrainerConfig lost {field}"
+        assert field in readme, f"README.md does not document {field}"
+    for name in ("python -m repro.resilience", "--offline",
+                 "RESILIENCE_report.json", "max_queue", "deadline",
+                 "CheckpointCorrupt", "restore_latest_verified"):
+        assert name in readme, f"README.md does not mention {name}"
+
+
+def test_architecture_documents_failure_model():
+    """docs/architecture.md must document the failure model — and every
+    hook/exception/counter it promises must actually exist."""
+    from repro import resilience
+    from repro.ckpt import checkpoint as ck
+    from repro.serve import engine as se
+
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "## Failure model & recovery" in arch
+    sect = arch.split("## Failure model & recovery", 1)[1]
+    assert "PR 10" in sect
+    for kind in resilience.KINDS:
+        assert f"`{kind}`" in sect, \
+            f"architecture.md does not document fault kind {kind!r}"
+    promised = {
+        resilience: ("FaultPlan", "Preempted", "REPRO_FAULTS"),
+        ck.Checkpointer: ("verify", "generations",
+                          "restore_latest_verified", "corrupt"),
+        se: ("Admitted", "Rejected"),
+        se.ServeEngine: ("inject_burst",),
+    }
+    for obj, names in promised.items():
+        for name in names:
+            assert name in sect, f"architecture.md lost {name!r}"
+            if name != "REPRO_FAULTS":
+                assert hasattr(obj, name), f"{obj} lost {name}"
+    assert resilience.ENV_VAR == "REPRO_FAULTS"
+    for counter in ("rejected_overload", "shed_deadline", "queue_peak",
+                    "max_bad_steps", "max_rollbacks", "bad_steps",
+                    "RESILIENCE_report.json", "CheckpointCorrupt"):
+        assert counter in sect, f"architecture.md lost {counter!r}"

@@ -117,13 +117,13 @@ def test_crash_save_survives_donated_buffers(tmp_path):
     real_step = tr._step
     calls = {"n": 0}
 
-    def dying_step(state, batch):
+    def dying_step(state, batch, fault):
         calls["n"] += 1
         if calls["n"] == 4:
             for leaf in jax.tree.leaves(state):  # simulate donation
                 leaf.delete()
             raise RuntimeError("boom inside step")
-        return real_step(state, batch)
+        return real_step(state, batch, fault)
 
     tr._step = dying_step
     with pytest.raises(RuntimeError, match="boom"):
